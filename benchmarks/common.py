@@ -1,0 +1,47 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints CSV rows ``name,value,derived`` (value in ms unless
+stated) and returns them for run.py to aggregate into bench_output.txt.
+All latencies are derived from the calibrated analytical cost model (this
+container has no accelerator — see DESIGN.md §7); live CPU measurements on
+smollm-135m validate mechanisms in tests/ and examples/.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.core import costmodel as cm
+from repro.core.plans import plan_for
+from repro.hw import A6000_PCIE4, A100_PCIE3, TPU_V5E
+
+PAPER_HW = A6000_PCIE4
+LORA_FRACTION = 0.01          # adapters < 1% of the base model (paper §2.3)
+
+
+def lora_bytes(plan) -> int:
+    return int(plan.total_weight_bytes * LORA_FRACTION)
+
+
+def emit(rows, header=("name", "value_ms", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows
+
+
+def strategies(plan, hw=PAPER_HW, dynamic: bool = False, template_bytes=0):
+    dyn = lora_bytes(plan) if dynamic else 0
+    return {
+        "pytorch-pin": cm.ttft_load_then_infer(plan, hw).total,
+        "serverlessllm": cm.ttft_load_then_infer(plan, hw,
+                                                 host_factor=1.02).total,
+        "tidal-0g": cm.ttft_tidal(plan, hw, template_bytes=0,
+                                  dynamic_bytes=dyn).total,
+        "tidal": cm.ttft_tidal(plan, hw, template_bytes=template_bytes,
+                               dynamic_bytes=dyn).total,
+        "tidal-warm": cm.ttft_tidal(plan, hw,
+                                    template_bytes=plan.total_weight_bytes,
+                                    dynamic_bytes=dyn).total,
+        "execution": cm.ttft_execution(plan, hw).total,
+    }

@@ -1,0 +1,51 @@
+"""Fig. 13: TTFT across LLM functions (input 2048, batch 1), with and
+without LoRA, vs PyTorch-pin / ServerlessLLM / Execution.
+
+Paper headline: Tidal-0G is 1.96x / 2.00x faster than PyTorch-pin /
+ServerlessLLM on average; 22%~84% slower than Execution."""
+
+from benchmarks.common import PAPER_HW, emit, lora_bytes
+from repro.core import costmodel as cm
+from repro.core.plans import plan_for
+
+# the paper evaluates GPT-2-1.5B..Llama2-13B; our pool's closest spread
+# (smollm-135m is far below the paper's range — it would inflate the
+# average because the fixed 180 ms cold-kernel cost dominates tiny models)
+ARCHS = ["gemma-2b", "llama3-8b", "llama2-13b", "qwen3-14b"]
+
+
+def main():
+    rows = []
+    speedups_pin, speedups_sllm = [], []
+    for arch in ARCHS:
+        plan = plan_for(arch, 1, 2048)
+        for lora in (False, True):
+            dyn = lora_bytes(plan) if lora else 0
+            tag = arch + ("-lora" if lora else "")
+            pin = cm.ttft_load_then_infer(plan, PAPER_HW).total
+            sllm = cm.ttft_load_then_infer(plan, PAPER_HW,
+                                           host_factor=1.02).total
+            t0g = cm.ttft_tidal(plan, PAPER_HW, template_bytes=0,
+                                dynamic_bytes=dyn).total
+            exe = cm.ttft_execution(plan, PAPER_HW).total
+            rows += [
+                (f"{tag}/pytorch-pin", round(pin * 1e3, 1), ""),
+                (f"{tag}/serverlessllm", round(sllm * 1e3, 1), ""),
+                (f"{tag}/tidal-0g", round(t0g * 1e3, 1),
+                 f"speedup_vs_sllm={sllm/t0g:.2f}x"),
+                (f"{tag}/execution", round(exe * 1e3, 1),
+                 f"tidal_gap={(t0g-exe)/exe*100:.0f}%"),
+            ]
+            speedups_pin.append(pin / t0g)
+            speedups_sllm.append(sllm / t0g)
+    rows.append(("avg_speedup_vs_pin",
+                 round(sum(speedups_pin) / len(speedups_pin), 2),
+                 "paper=1.96x"))
+    rows.append(("avg_speedup_vs_serverlessllm",
+                 round(sum(speedups_sllm) / len(speedups_sllm), 2),
+                 "paper=2.00x"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

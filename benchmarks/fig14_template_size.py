@@ -1,0 +1,40 @@
+"""Fig. 14: TTFT vs template size (0G -> whole model), llama family +
+LoRA variants.  Paper: Tidal-Warm is 14%~48% faster than Tidal-0G; dynamic
+functions need SMALLER templates to reach best TTFT (their adapter init
+overlaps more loading)."""
+
+from benchmarks.common import PAPER_HW, emit, lora_bytes
+from repro.core import costmodel as cm
+from repro.core.plans import plan_for
+
+
+def main():
+    rows = []
+    for arch in ("llama3-8b", "llama2-13b"):
+        plan = plan_for(arch, 1, 2048)
+        for lora in (False, True):
+            dyn = lora_bytes(plan) if lora else 0
+            tag = arch + ("-lora" if lora else "")
+            base = None
+            best_g = None
+            for g in (0, 2, 4, 6, 8, 12, 16, 32):
+                tb = min(g << 30, plan.total_weight_bytes)
+                t = cm.ttft_tidal(plan, PAPER_HW, template_bytes=tb,
+                                  dynamic_bytes=dyn).total
+                if base is None:
+                    base = t
+                if best_g is None and g and abs(
+                        t - cm.ttft_tidal(plan, PAPER_HW,
+                                          template_bytes=plan.total_weight_bytes,
+                                          dynamic_bytes=dyn).total) < 1e-3:
+                    best_g = g
+                rows.append((f"{tag}/template_{g}G", round(t * 1e3, 1),
+                             f"vs_0G={base/t:.2f}x"))
+            rows.append((f"{tag}/saturation_point",
+                         best_g if best_g is not None else "warm",
+                         "GiB_to_reach_warm_ttft"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig. 15/16: TTFT vs input length and batch size for template sizes
+{0G, 4G, warm}.  Paper: a TURNING POINT exists where 0G/4G converge with
+warm because longer inference fully hides the loading."""
+
+from benchmarks.common import PAPER_HW, emit, lora_bytes
+from repro.core import costmodel as cm
+from repro.core.plans import plan_for
+
+
+def _row(tag, plan, dyn):
+    t0 = cm.ttft_tidal(plan, PAPER_HW, template_bytes=0,
+                       dynamic_bytes=dyn).total
+    t4 = cm.ttft_tidal(plan, PAPER_HW, template_bytes=4 << 30,
+                       dynamic_bytes=dyn).total
+    tw = cm.ttft_tidal(plan, PAPER_HW,
+                       template_bytes=plan.total_weight_bytes,
+                       dynamic_bytes=dyn).total
+    conv = "CONVERGED" if (t0 - tw) / tw < 0.03 else ""
+    return [(f"{tag}/0G", round(t0 * 1e3, 1), conv),
+            (f"{tag}/4G", round(t4 * 1e3, 1), ""),
+            (f"{tag}/warm", round(tw * 1e3, 1), "")]
+
+
+def main():
+    rows = []
+    for arch in ("llama3-8b", "llama2-13b"):
+        base = plan_for(arch, 1, 2048)
+        dyn = lora_bytes(base)
+        # Fig 15: input length sweep, batch 1
+        for seq in (512, 1024, 2048, 4096, 8192):
+            rows += _row(f"{arch}/len{seq}", plan_for(arch, 1, seq), dyn)
+        # Fig 16: batch sweep, input 2048
+        for b in (1, 2, 4, 8, 16):
+            rows += _row(f"{arch}/batch{b}", plan_for(arch, b, 2048), dyn)
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

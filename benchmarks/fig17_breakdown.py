@@ -1,0 +1,41 @@
+"""Fig. 17: TIDAL improvement breakdown, Llama3-8B + LoRA.
+
+Paper anchor points: 2k input / 0G template -> 632 ms (loading-dominated);
+4G template -> 571 ms (inference-dominated); 4k input -> 927 ms
+(inference-dominated).  Our calibrated model must land near these."""
+
+from benchmarks.common import PAPER_HW, emit, lora_bytes
+from repro.core import costmodel as cm
+from repro.core.plans import plan_for
+
+PAPER = {"2k_0G": 632, "2k_4G": 571, "4k_4G": 927}
+
+
+def main():
+    rows = []
+    plan2k = plan_for("llama3-8b", 1, 2048)
+    plan4k = plan_for("llama3-8b", 1, 4096)
+    dyn = lora_bytes(plan2k)
+    cases = {
+        "2k_0G": cm.ttft_tidal(plan2k, PAPER_HW, template_bytes=0,
+                               dynamic_bytes=dyn),
+        "2k_4G": cm.ttft_tidal(plan2k, PAPER_HW, template_bytes=4 << 30,
+                               dynamic_bytes=dyn),
+        "4k_4G": cm.ttft_tidal(plan4k, PAPER_HW, template_bytes=4 << 30,
+                               dynamic_bytes=dyn),
+    }
+    for tag, bd in cases.items():
+        dominated = "loading" if bd.load > 0.2 * bd.compute else "inference"
+        err = (bd.total * 1e3 - PAPER[tag]) / PAPER[tag] * 100
+        rows += [
+            (f"{tag}/total", round(bd.total * 1e3, 1),
+             f"paper={PAPER[tag]}ms err={err:+.0f}%"),
+            (f"{tag}/exposed_load", round(bd.load * 1e3, 1), dominated),
+            (f"{tag}/compute", round(bd.compute * 1e3, 1), ""),
+            (f"{tag}/dynamic_init", round(bd.dynamic_init * 1e3, 1), ""),
+        ]
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

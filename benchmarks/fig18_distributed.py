@@ -1,0 +1,38 @@
+"""Fig. 18: distributed (tensor-parallel) TTFT — llama2-13b / llama2-34b
+(approximated by qwen2.5-32b, same class) / llama2-70b on 2/4/8 A100s.
+
+Paper: Tidal-0G/4G/8G/Warm achieve 1.76~2.01x / 2.33~2.66x / 3.15~4.24x /
+3.19~5.16x speedup over PyTorch-pin."""
+
+from benchmarks.common import emit
+from repro.core import costmodel as cm
+from repro.core.plans import plan_for
+from repro.hw import A100_PCIE3
+
+CASES = [("llama2-13b", 2), ("qwen2.5-32b", 4), ("llama2-70b", 8)]
+
+
+def main():
+    rows = []
+    for arch, tp in CASES:
+        plan = plan_for(arch, 1, 4096)
+        pin = cm.ttft_load_then_infer(plan, A100_PCIE3, tp=tp).total
+        variants = {
+            "tidal-0g": cm.ttft_tidal(plan, A100_PCIE3, tp=tp).total,
+            "tidal-4g": cm.ttft_tidal(plan, A100_PCIE3, tp=tp,
+                                      template_bytes=4 << 30).total,
+            "tidal-8g": cm.ttft_tidal(plan, A100_PCIE3, tp=tp,
+                                      template_bytes=8 << 30).total,
+            "tidal-warm": cm.ttft_tidal(
+                plan, A100_PCIE3, tp=tp,
+                template_bytes=plan.total_weight_bytes).total,
+        }
+        rows.append((f"{arch}-tp{tp}/pytorch-pin", round(pin * 1e3, 1), ""))
+        for k, v in variants.items():
+            rows.append((f"{arch}-tp{tp}/{k}", round(v * 1e3, 1),
+                         f"speedup={pin/v:.2f}x"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

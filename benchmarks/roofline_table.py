@@ -1,0 +1,36 @@
+"""Roofline table: reads the dry-run artifacts (all arch x shape x mesh)
+and prints the three terms, dominant bottleneck, useful ratio and roofline
+fraction per cell.  Run ``python -m repro.launch.dryrun --all`` first."""
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def main():
+    rows = []
+    paths = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not paths:
+        return emit([("roofline/no_artifacts", 0,
+                      "run python -m repro.launch.dryrun --all first")])
+    for p in paths:
+        with open(p) as f:
+            a = json.load(f)
+        m, r = a["meta"], a["roofline"]
+        mesh = "x".join(str(v) for v in m["mesh"].values())
+        tag = f"{m['arch']}|{m['shape']}|{mesh}"
+        rows.append((
+            tag,
+            round(max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3, 3),
+            f"comp={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+            f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+            f"useful={r['useful_ratio']:.2f} frac={r['roofline_fraction']:.3f}"))
+    return emit(rows, header=("cell", "bound_ms", "terms"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end FaaS cluster driver (the paper's §7.3 experiment, runnable):
+16 LLM functions x real-world-style traces on an 8-GPU cluster, comparing
+ServerlessLLM against the TIDAL variants, with keep-alive, early-reject,
+elastic scaling and straggler hedging.
+
+    PYTHONPATH=src python examples/faas_cluster.py
+"""
+
+import numpy as np
+
+from repro.core.plans import plan_for
+from repro.core.scheduler import (ClusterSim, FunctionProfile,
+                                  SchedulerConfig, make_trace, summarize)
+from repro.hw import A6000_PCIE4
+
+LORA_FRAC = 0.01
+
+
+def build():
+    fns, rates, tasks = {}, {}, {}
+    tasklist = ["mail", "conv", "code", "longbench"]
+    ratelist = [0.16, 0.31, 0.5]
+    i = 0
+    for arch in ("llama3-8b", "llama2-13b"):
+        plan = plan_for(arch, 1, 2048)
+        for lora in (False, True):
+            for k in range(4):
+                name = f"{arch}{'-lora' if lora else ''}-{k}"
+                fns[name] = FunctionProfile(
+                    name=name,
+                    plan_for_len=lambda L, a=arch: plan_for(a, 1, L),
+                    dynamic_bytes=int(plan.total_weight_bytes * LORA_FRAC)
+                    if lora else 0,
+                    template_bytes=0,
+                    model_bytes=plan.total_weight_bytes)
+                tasks[name] = tasklist[k % 4]
+                rates[name] = ratelist[i % 3]
+                i += 1
+    return fns, rates, tasks
+
+
+def main():
+    fns, rates, tasks = build()
+    trace = make_trace(rates, duration_s=900.0, fn_tasks=tasks, seed=11)
+    print(f"trace: {len(trace)} requests over 15 min, 16 functions")
+
+    def show(tag, cfg):
+        s = summarize(ClusterSim(cfg, fns).run(trace))
+        print(f"{tag:28s} p50={s['p50']*1e3:7.0f}ms p95={s['p95']*1e3:8.0f}ms "
+              f"cold={s['cold']:5d} warm={s['warm']:5d} fork={s['fork']:5d} "
+              f"rej={s['rejected']:4d} hedged={s['hedged']}")
+        return s
+
+    show("serverlessllm",
+         SchedulerConfig(n_gpus=8, policy="serverlessllm", keep_alive_s=1.0,
+                         hw=A6000_PCIE4))
+    show("tidal",
+         SchedulerConfig(n_gpus=8, policy="tidal", keep_alive_s=1.0,
+                         hw=A6000_PCIE4))
+    show("tidal-dk (keepalive 10s)",
+         SchedulerConfig(n_gpus=8, policy="tidal", dk=True, keep_alive_s=10.0,
+                         hw=A6000_PCIE4))
+    show("tidal-dk + hedging",
+         SchedulerConfig(n_gpus=8, policy="tidal", dk=True, keep_alive_s=10.0,
+                         hedge_after=2.0, hw=A6000_PCIE4))
+    print("\nelastic scaling: 4 GPUs join at t=300s after a burst:")
+    show("tidal-dk elastic 8->12",
+         SchedulerConfig(n_gpus=8, policy="tidal", dk=True, keep_alive_s=10.0,
+                         capacity_events=((300.0, +4),), hw=A6000_PCIE4))
+
+
+if __name__ == "__main__":
+    main()

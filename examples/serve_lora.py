@@ -1,0 +1,56 @@
+"""Dynamic LLM function with request-specific LoRA adapters (paper §2.3,
+Figure 6/12): every request picks a different adapter; TIDAL's strict
+tracing flags the adapted weights dynamic, forks the static 99% from the
+template and replays only the adapter merge.
+
+    PYTHONPATH=src python examples/serve_lora.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as tidal
+from repro.core.template_server import TemplateServer
+from repro.data.pipeline import make_prompts
+from repro.models.registry import get_smoke_model
+from repro.utils import fmt_bytes
+
+
+def main():
+    model = get_smoke_model("smollm-135m", n_layers=8)
+    params = model.init_params(jax.random.PRNGKey(0))
+    fn = tidal.lora_function("multilingual", model, params,
+                             target_paths=["blocks.attn.wq",
+                                           "blocks.attn.wv"],
+                             n_adapters=4, rank=4)
+    srv = TemplateServer(trace_batch=1, trace_seq=32)
+    srv.register(fn, {"adapter": "adapter-0"})
+    # residency: keep everything static on-device (Tidal-Warm for clarity)
+    srv.set_resident_bytes("multilingual",
+                           srv.templates["multilingual"].total_bytes)
+
+    prompts = jnp.asarray(make_prompts(model.cfg.vocab_size, 1, 32, seed=2))
+    for i, adapter in enumerate(["adapter-1", "adapter-2", "adapter-1",
+                                 "adapter-3"]):
+        t0 = time.perf_counter()
+        session, stats = srv.fork("multilingual", {"adapter": adapter})
+        p = session.params()
+        kv = model.make_cache(1, 64)
+        logits, kv = model.prefill(p, {"tokens": prompts}, kv)
+        tok = int(jnp.argmax(logits[0]))
+        dt = time.perf_counter() - t0
+        tmpl = srv.templates["multilingual"]
+        print(f"req{i} adapter={adapter}: ttft={dt*1e3:6.1f}ms "
+              f"reused={fmt_bytes(stats.reused_bytes):>10} "
+              f"dynamic={fmt_bytes(stats.dynamic_bytes):>9} "
+              f"newly_excluded={list(stats.new_dynamic)} tok={tok}")
+    tmpl = srv.templates["multilingual"]
+    print(f"\ntemplate after 5 invocations: dynamic={sorted(tmpl.dynamic)} "
+          f"({tmpl.dynamic_bytes/tmpl.total_bytes:.1%} of weights — "
+          f"the paper's <1% at full scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — TIDAL (FaaS for LLMs) reproduced as a JAX/TPU framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,21 @@
+"""DeepSeek-V3 (671B total / 37B active) — MLA, 1 shared + 256 routed
+experts top-8 [arXiv:2412.19437].
+
+Deviation noted in DESIGN.md: the real model has 3 dense leading layers and
+MTP; we use a uniform 61-layer MoE stack so the block scan stays homogeneous
+(compact HLO, shared block executable).  MLA dims follow the paper:
+q_lora 1536, kv_lora 512, nope 128, rope 64, v_head 128.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, head_dim=192,
+    d_ff=2048, vocab_size=129280,
+    n_experts=256, top_k=8, n_shared_experts=1, moe_d_ff=2048,
+    capacity_factor=1.25,
+    use_mla=True, q_lora_rank=1536, kv_lora_rank=512,
+    qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    attention_kind="full",
+    dtype="bfloat16",
+)

@@ -1,0 +1,1 @@
+"""TIDAL core: tracing, templates, forking, streaming, prewarm, scheduling."""

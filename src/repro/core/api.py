@@ -1,0 +1,165 @@
+"""TIDAL programming interface (paper Figure 9), JAX edition.
+
+    import repro.core.api as tidal
+
+    @tidal.init(static=False)
+    def initializer(event, context):
+        base = tidal.load(event["checkpoints"]["llama"])          # static
+        lora = tidal.load(event["checkpoints"][event["adapter"]]) # dynamic
+        w = dict(base)
+        delta = lora["blocks.attn.wq.A"].matmul(lora["blocks.attn.wq.B"])
+        w["blocks.attn.wq"] = w["blocks.attn.wq"].add(delta.scale(0.5))
+        return tidal.assemble(model, w)
+
+    fn = tidal.LLMFunction("llama-lora", model, initializer)
+
+The initializer runs under strict tracing on *every* invocation (that is how
+dynamic weights are detected), but static weights are never re-materialized
+— their TracedArray stays lazy and the template server forks the existing
+buffers instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.fingerprint import Checkpoint, TracedArray, tree_fingerprints
+from repro.models.registry import Model
+from repro.utils import path_str
+
+
+def init(static: bool = False):
+    """Decorator marking a function initializer (paper's ``tidal.init``).
+
+    ``static=True`` promises request-agnostic initialization: keep-alive can
+    skip re-initialization entirely.  Without the annotation TIDAL assumes
+    dynamic and re-runs the (traced) initializer per invocation.
+    """
+    def deco(fn):
+        fn._tidal_init = True
+        fn._tidal_static = static
+        return fn
+    return deco
+
+
+def load(checkpoint: Checkpoint) -> dict:
+    """Load a checkpoint into TracedArray handles (strict-traced)."""
+    return checkpoint.load_all()
+
+
+def assemble(model: Model, weights: dict):
+    """Arrange a flat {path: TracedArray} dict into the model's params tree."""
+    specs = model.init_params(abstract=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    leaves = []
+    for p, spec in flat:
+        path = path_str(p)
+        if path not in weights:
+            raise KeyError(f"initializer produced no weight for {path}")
+        ta = weights[path]
+        if tuple(ta.shape) != tuple(spec.shape):
+            raise ValueError(f"{path}: shape {ta.shape} != spec {spec.shape}")
+        leaves.append(ta)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_of(uri: str, params) -> Checkpoint:
+    """Build a host 'checkpoint' from a concrete params pytree (test/demo
+    helper standing in for a file on storage)."""
+    arrays = {}
+    for p, leaf in jax.tree_util.tree_leaves_with_path(params):
+        arrays[path_str(p)] = np.asarray(leaf)
+    return Checkpoint(uri=uri, arrays=arrays)
+
+
+def lora_checkpoint(uri: str, model: Model, target_paths: list, rank: int = 8,
+                    seed: int = 0) -> Checkpoint:
+    """A synthetic LoRA adapter checkpoint: A [out-ish, r], B [r, in-ish]
+    factors per target weight path."""
+    specs = model.init_params(abstract=True)
+    by_path = {path_str(p): s
+               for p, s in jax.tree_util.tree_leaves_with_path(specs)}
+    rng = np.random.default_rng(seed)
+    arrays = {}
+    for path in target_paths:
+        spec = by_path[path]
+        shape = tuple(spec.shape)
+        lead, last = int(np.prod(shape[:-1])), shape[-1]
+        arrays[path + ".A"] = (rng.standard_normal((lead, rank)) * 0.01
+                               ).astype(np.float32)
+        arrays[path + ".B"] = (rng.standard_normal((rank, last)) * 0.01
+                               ).astype(np.float32)
+    return Checkpoint(uri=uri, arrays=arrays)
+
+
+def apply_lora(weights: dict, model: Model, adapter: Checkpoint,
+               alpha: float = 1.0) -> dict:
+    """Merge a LoRA adapter into base weights (all traced ops)."""
+    out = dict(weights)
+    target_paths = sorted({k.rsplit(".", 1)[0] for k in adapter.arrays})
+    specs = model.init_params(abstract=True)
+    by_path = {path_str(p): s
+               for p, s in jax.tree_util.tree_leaves_with_path(specs)}
+    for path in target_paths:
+        A = adapter.load(path + ".A")
+        B = adapter.load(path + ".B")
+        delta = A.matmul(B).scale(alpha)
+        spec = by_path[path]
+        delta = delta.reshape(tuple(spec.shape)).astype(out[path].dtype)
+        out[path] = out[path].add(delta)
+    return out
+
+
+@dataclasses.dataclass
+class LLMFunction:
+    """One deployed FaaS function: a model + a traced initializer."""
+    name: str
+    model: Model
+    initializer: Callable            # (event, context) -> traced params tree
+    timeout_s: float = 60.0
+
+    @property
+    def static(self) -> bool:
+        return getattr(self.initializer, "_tidal_static", False)
+
+    def run_initializer(self, event: dict, context: Optional[dict] = None):
+        """Execute the initializer under strict tracing.  Returns
+        (traced params pytree, {path: fingerprint})."""
+        traced = self.initializer(event, context or {})
+        return traced, tree_fingerprints(traced)
+
+
+def static_function(name: str, model: Model, params) -> LLMFunction:
+    """Convenience: a function whose initializer always loads the same
+    checkpoint (fully static, the paper's non-LoRA case)."""
+    ckpt = checkpoint_of(f"ckpt://{name}", params)
+
+    @init(static=True)
+    def initializer(event, context):
+        return assemble(model, load(ckpt))
+
+    return LLMFunction(name=name, model=model, initializer=initializer)
+
+
+def lora_function(name: str, model: Model, params, target_paths: list,
+                  n_adapters: int = 4, rank: int = 4) -> LLMFunction:
+    """A dynamic function: base model + request-selected LoRA adapter
+    (the paper's multilingual-function case)."""
+    base = checkpoint_of(f"ckpt://{name}-base", params)
+    adapters = {f"adapter-{i}": lora_checkpoint(f"ckpt://{name}-lora{i}",
+                                                model, target_paths,
+                                                rank=rank, seed=100 + i)
+                for i in range(n_adapters)}
+
+    @init(static=False)
+    def initializer(event, context):
+        w = load(base)
+        adapter = adapters[event.get("adapter", "adapter-0")]
+        w = apply_lora(w, model, adapter)
+        return assemble(model, w)
+
+    return LLMFunction(name=name, model=model, initializer=initializer)

@@ -1,0 +1,138 @@
+"""Strict tracing of model initialization: per-weight data-flow-graph
+fingerprints (TIDAL §4.1, Figure 10 left).
+
+A weight's DFG records *how it was produced*: which checkpoint it was loaded
+from, under which key, with which shape/dtype, and which transform chain
+followed.  Two invocations whose DFGs match for a weight mean the weight is
+request-agnostic (static) and can be forked from the template; a mismatch
+(e.g. a LoRA adapter loaded from a request-specific checkpoint) flags the
+weight as dynamic (TIDAL excludes it from the template incrementally).
+
+The tracer is the JAX-world analogue of TIDAL's PyTorch dispatch-mode
+tracer: initialization code calls ``tidal.load`` / arithmetic on
+:class:`TracedArray`, every op appends to the fingerprint chain, and the
+final params pytree carries one fingerprint per leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+Fingerprint = tuple  # nested tuples, hashable
+
+
+def _fp_hash(fp: Fingerprint) -> str:
+    return hashlib.sha1(repr(fp).encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class TracedArray:
+    """A host weight tensor + the DFG that produced it.
+
+    ``data`` may be None for *deferred* loads (the template server
+    materializes from the host pool only when actually needed — weights
+    forked from the template never re-materialize host-side).
+    """
+    fp: Fingerprint
+    shape: tuple
+    dtype: np.dtype
+    _data: Optional[np.ndarray] = None
+    _thunk: Optional[Callable[[], np.ndarray]] = None
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+    def materialize(self) -> np.ndarray:
+        if self._data is None:
+            if self._thunk is None:
+                raise ValueError(f"no data source for {self.fp!r}")
+            self._data = np.asarray(self._thunk())
+        return self._data
+
+    # ---- traced transforms (each extends the DFG) -----------------------
+    def astype(self, dtype) -> "TracedArray":
+        dtype = np.dtype(dtype)
+        return TracedArray(
+            fp=("astype", str(dtype), self.fp), shape=self.shape, dtype=dtype,
+            _thunk=lambda: self.materialize().astype(dtype))
+
+    def reshape(self, *shape) -> "TracedArray":
+        shape = tuple(shape[0]) if len(shape) == 1 and isinstance(shape[0], (tuple, list)) else shape
+        return TracedArray(
+            fp=("reshape", shape, self.fp), shape=shape, dtype=self.dtype,
+            _thunk=lambda: self.materialize().reshape(shape))
+
+    def transpose(self, *axes) -> "TracedArray":
+        axes = axes or None
+        new_shape = tuple(reversed(self.shape)) if axes is None else tuple(
+            self.shape[a] for a in axes)
+        return TracedArray(
+            fp=("transpose", axes, self.fp), shape=new_shape, dtype=self.dtype,
+            _thunk=lambda: self.materialize().transpose(axes))
+
+    def scale(self, alpha: float) -> "TracedArray":
+        return TracedArray(
+            fp=("scale", float(alpha), self.fp), shape=self.shape, dtype=self.dtype,
+            _thunk=lambda: self.materialize() * alpha)
+
+    def add(self, other: "TracedArray") -> "TracedArray":
+        """Elementwise add — e.g. merging a LoRA delta into a base weight."""
+        assert self.shape == other.shape, (self.shape, other.shape)
+        return TracedArray(
+            fp=("add", self.fp, other.fp), shape=self.shape, dtype=self.dtype,
+            _thunk=lambda: self.materialize() + other.materialize().astype(self.dtype))
+
+    def matmul(self, other: "TracedArray") -> "TracedArray":
+        """e.g. LoRA A @ B to form the low-rank delta."""
+        new_shape = self.shape[:-1] + other.shape[1:]
+        return TracedArray(
+            fp=("matmul", self.fp, other.fp), shape=new_shape, dtype=self.dtype,
+            _thunk=lambda: self.materialize() @ other.materialize())
+
+
+@dataclasses.dataclass
+class Checkpoint:
+    """A named host-side checkpoint (the unit ``tidal.load`` reads).
+
+    ``uri`` identifies the source; loads from different uris produce
+    different fingerprints — this is exactly how LoRA adapters are detected
+    as dynamic (same shapes, different source checkpoint per request).
+    """
+    uri: str
+    arrays: dict            # key -> np.ndarray (or callable -> np.ndarray)
+
+    def load(self, key: str) -> TracedArray:
+        src = self.arrays[key]
+        get = src if callable(src) else (lambda s=src: s)
+        probe = get()
+        return TracedArray(
+            fp=("load", self.uri, key, tuple(probe.shape), str(probe.dtype)),
+            shape=tuple(probe.shape), dtype=np.dtype(probe.dtype),
+            _data=np.asarray(probe))
+
+    def load_all(self) -> dict:
+        return {k: self.load(k) for k in self.arrays}
+
+
+def tree_fingerprints(tree) -> dict:
+    """path -> fingerprint for a pytree of TracedArray."""
+    import jax
+    from repro.utils import path_str
+    out = {}
+    for p, leaf in jax.tree_util.tree_leaves_with_path(
+            tree, is_leaf=lambda x: isinstance(x, TracedArray)):
+        if isinstance(leaf, TracedArray):
+            out[path_str(p)] = leaf.fp
+    return out
+
+
+def diff_fingerprints(a: dict, b: dict) -> set:
+    """Paths whose DFG differs between two invocations -> dynamic weights."""
+    keys = set(a) | set(b)
+    return {k for k in keys if a.get(k) != b.get(k)}

@@ -1,0 +1,90 @@
+"""Copy-on-write guarantees for forked template state (TIDAL §5.2
+"Efficient overlapping with correctness ensuring", and §7.5 security).
+
+In CUDA, TIDAL must actively intercept writes to forked weights and copy
+them.  In JAX, arrays are immutable, so sharing template buffers across
+invocations is safe by construction with ONE exception: buffer *donation*
+(``donate_argnums``) lets XLA reuse an input buffer for an output,
+invalidating it for other holders.  The donation guard therefore plays the
+role of TIDAL's runtime write-interception:
+
+  * ``guard`` snapshots cheap content checksums of the template buffers;
+  * ``check`` verifies the buffers are untouched after an invocation
+    (catching both accidental donation and in-place custom calls);
+  * ``safe_jit`` refuses donation of any argument that aliases guarded
+    buffers.
+
+``copy_for_write`` is the explicit CoW escape hatch for code that *does*
+need to mutate a forked weight (e.g. in-place quantization experiments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import path_str
+
+
+def _checksum(arr) -> tuple:
+    a = np.asarray(arr)
+    # cheap rolling checksum: shape, dtype, strided sample, and sum
+    flat = a.reshape(-1)
+    sample = flat[:: max(flat.size // 64, 1)][:64]
+    return (a.shape, str(a.dtype), float(np.sum(sample, dtype=np.float64)),
+            float(np.sum(flat[:256], dtype=np.float64)))
+
+
+@dataclasses.dataclass
+class DonationGuard:
+    """Tracks template-owned device buffers and detects invalidation."""
+    checksums: dict
+    ids: dict
+
+    @classmethod
+    def guard(cls, buffers: dict) -> "DonationGuard":
+        return cls(checksums={k: _checksum(v) for k, v in buffers.items()},
+                   ids={k: id(v) for k, v in buffers.items()})
+
+    def check(self, buffers: dict) -> list:
+        """Returns list of violated paths (should be empty)."""
+        bad = []
+        for k, v in buffers.items():
+            if k not in self.checksums:
+                continue
+            try:
+                if self.checksums[k] != _checksum(v):
+                    bad.append(k)
+            except RuntimeError:      # deleted/donated buffer
+                bad.append(k)
+        return bad
+
+
+def guarded_paths(params, template_paths: Iterable[str]) -> dict:
+    tp = set(template_paths)
+    out = {}
+    for p, leaf in jax.tree_util.tree_leaves_with_path(params):
+        s = path_str(p)
+        if s in tp:
+            out[s] = leaf
+    return out
+
+
+def safe_jit(fn, guarded_argnums: Iterable[int] = (0,), **jit_kwargs):
+    """jit that refuses donation of guarded (template) arguments."""
+    donate = set(jit_kwargs.pop("donate_argnums", ()) or ())
+    overlap = donate & set(guarded_argnums)
+    if overlap:
+        raise ValueError(
+            f"donation of template-owned arguments {sorted(overlap)} would "
+            f"break copy-on-write sharing across forked invocations")
+    return jax.jit(fn, donate_argnums=tuple(donate), **jit_kwargs)
+
+
+def copy_for_write(leaf: jax.Array) -> jax.Array:
+    """Explicit copy-on-write: a private copy safe to donate/mutate."""
+    return jnp.array(leaf, copy=True)

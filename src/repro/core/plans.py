@@ -1,0 +1,57 @@
+"""Workload-plan construction for FULL architecture configs.
+
+Traces the real config abstractly (ShapeDtypeStruct params — no memory is
+allocated even for deepseek-v3-671b) and builds the cost-model plan used by
+the TTFT benchmarks and the scheduler's latency oracles.  Plans are cached
+per (arch, batch, seq) because abstract tracing of a 61-layer MoE still
+costs a few CPU seconds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.core.tracing import trace_weight_access, weight_sizes
+from repro.models.registry import Model, get_model
+
+
+@functools.lru_cache(maxsize=64)
+def _trace_for(arch: str, trace_seq: int):
+    model = get_model(arch)
+    specs = model.init_params(abstract=True)
+    inputs = model.input_specs("prefill", 1, trace_seq, dtype=jnp.bfloat16)
+    cache = model.make_cache(1, trace_seq, abstract=True, dtype=jnp.bfloat16)
+    trace = trace_weight_access(
+        lambda p, i, c: model.prefill(p, i, c), specs, inputs, cache)
+    sizes = weight_sizes(specs, trace.order)
+    return trace, sizes
+
+
+def plan_for(arch: str, batch: int, seq: int,
+             trace_seq: int = 256) -> costmodel.WorkloadPlan:
+    """WorkloadPlan for a full config at the given workload shape.
+
+    The access ORDER is shape-independent, so tracing happens once at a
+    small sequence length and the per-stage costs are evaluated at the
+    requested (batch, seq).
+    """
+    model = get_model(arch)
+    cfg = model.cfg
+    # recurrent families need seq % chunk == 0 at trace time
+    if cfg.ssm_chunk:
+        trace_seq = max(trace_seq // cfg.ssm_chunk, 1) * cfg.ssm_chunk
+    trace, sizes = _trace_for(arch, trace_seq)
+    return costmodel.build_plan(cfg, trace.order, sizes, batch, seq,
+                                dtype_bytes=2)
+
+
+def kernel_set_for(arch: str, trace_seq: int = 256):
+    model = get_model(arch)
+    cfg = model.cfg
+    if cfg.ssm_chunk:
+        trace_seq = max(trace_seq // cfg.ssm_chunk, 1) * cfg.ssm_chunk
+    trace, _ = _trace_for(arch, trace_seq)
+    return trace.kernels

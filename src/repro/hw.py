@@ -1,0 +1,78 @@
+"""Hardware profiles used by the analytical cost model and roofline analysis.
+
+Two profiles matter:
+
+* ``A6000_PCIE4`` — the paper's first testbed (Nvidia RTX A6000, PCIe 4.0
+  host link).  Used to validate the reproduction against the paper's own
+  reported numbers (Fig. 13-20, Table 3).
+* ``TPU_V5E`` — the adaptation target for this repo.  All roofline terms in
+  EXPERIMENTS.md are computed against these constants (given by the task
+  brief): 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bandwidth: float        # bytes/s per chip
+    hbm_capacity: float         # bytes per chip
+    host_to_device_bw: float    # bytes/s per host link (PCIe / DMA)
+    interconnect_bw: float      # bytes/s per link (ICI / NVLink)
+    host_memory: float          # bytes per host
+    storage_bw: float = 2e9     # bytes/s local NVMe (dynamic adapter loads)
+    # achievable fractions of peak for the *cost model* (roofline terms in
+    # EXPERIMENTS.md always use raw peaks); calibrated against Fig. 17.
+    flops_eff: float = 0.45
+    bw_eff: float = 0.85
+    # Fixed runtime costs (seconds), calibrated from the paper where available.
+    context_create_s: float = 0.5       # CUDA ctx / TPU client init
+    kernel_cold_load_s: float = 0.180   # paper: ~180 ms lazy code-segment load
+    prewarm_base_s: float = 0.830       # paper: process pre-warm 830 ms
+    prewarm_tidal_s: float = 1.070      # paper: with proactive code loading
+    fork_overhead_s: float = 0.010      # template-start fork (paper: <10 ms)
+    copy_call_overhead_s: float = 10e-6 # per async-copy command issue overhead
+
+
+# Paper testbed 1: 4 servers x (AMD EPYC 7R32 + 2x RTX A6000 48GB), PCIe 4.0.
+A6000_PCIE4 = HardwareProfile(
+    name="a6000-pcie4",
+    peak_flops_bf16=155e12,          # A6000 BF16 w/ sparsity off (~155 TFLOP/s tensor)
+    hbm_bandwidth=768e9,             # GDDR6 768 GB/s
+    hbm_capacity=48 * 2**30,
+    host_to_device_bw=32e9,          # PCIe 4.0 x16 (paper: 32 GB/s)
+    interconnect_bw=32e9,            # no NVLink on testbed-1; PCIe p2p
+    host_memory=512 * 2**30,
+)
+
+# Paper testbed 2: Intel Xeon 8369B + 8x A100 80GB, PCIe 3.0 (16 GB/s).
+A100_PCIE3 = HardwareProfile(
+    name="a100-pcie3",
+    peak_flops_bf16=312e12,
+    hbm_bandwidth=2039e9,
+    hbm_capacity=80 * 2**30,
+    host_to_device_bw=16e9,          # paper: PCIe 3.0, 16 GB/s
+    interconnect_bw=16e9,
+    host_memory=1024 * 2**30,
+)
+
+# Adaptation target: TPU v5e (constants fixed by the task brief).
+TPU_V5E = HardwareProfile(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_capacity=16 * 2**30,
+    host_to_device_bw=32e9,          # host DMA over PCIe-4-class link
+    interconnect_bw=50e9,            # per ICI link
+    host_memory=512 * 2**30,
+)
+
+PROFILES = {p.name: p for p in (A6000_PCIE4, A100_PCIE3, TPU_V5E)}
+
+
+def get_profile(name: str) -> HardwareProfile:
+    return PROFILES[name]

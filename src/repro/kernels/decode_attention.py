@@ -1,0 +1,108 @@
+"""Flash-decoding: single-token attention against a long KV cache, as a
+Pallas TPU kernel.
+
+TPU adaptation notes:
+  * decode attention is MEMORY-bound (one query row vs a 32k..500k cache);
+    the kernel streams KV blocks HBM->VMEM once and keeps the online softmax
+    state for the whole query-group tile in VMEM scratch;
+  * the grid is (batch, kv_head, kv_blocks), kv innermost (sequential) —
+    all G=H/KV query heads of one KV head form the [G, d] tile processed
+    together, so GQA costs one KV pass regardless of G (the MXU contraction
+    is [G x d] @ [d x bk]);
+  * variable cache occupancy is handled with a per-batch ``length`` scalar
+    (SMEM) masking the tail block — the serve path grows the cache position
+    per step without re-tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, bk: int, nk: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    # skip blocks entirely past the valid cache region
+    @pl.when(t * bk < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, bk]
+        cols = t * bk + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1)
+        scores = jnp.where(cols < length, scores, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, length, *, block_k: int = 256,
+                     interpret: bool | None = None):
+    """q: [B, H, d]; k,v: [B, KV, T, d]; length: scalar or [B] valid
+    positions.  Returns [B, H, d]."""
+    B, H, d = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    G = H // KV
+    bk = min(block_k, T)
+    assert T % bk == 0
+    nk = T // bk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    scale = 1.0 / np.sqrt(d)
+
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,))
+    qg = q.reshape(B, KV, G, d)
+
+    kernel = functools.partial(_kernel, scale=scale, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, t: (b,),
+                         memory_space=pltpu.SMEM),       # per-batch length
+            pl.BlockSpec((1, 1, G, d), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, t: (b, h, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, d), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, d)

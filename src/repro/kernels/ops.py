@@ -1,0 +1,62 @@
+"""jit'd wrappers around the Pallas kernels + XLA fallbacks.
+
+The model layer calls these through ``cfg.attn_impl``:
+  * 'xla'    — pure-jnp reference path (runs everywhere, default on CPU);
+  * 'pallas' — TPU kernels (validated in interpret mode on CPU).
+
+Wrappers own the layout glue (head-major transposes, block-size selection,
+shape-divisibility fallbacks) so kernels stay minimal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _pick_block(S: int, want: int = 128) -> int:
+    b = min(want, S)
+    while S % b:
+        b //= 2
+    return max(b, 1)
+
+
+def flash_attention(q, k, v, causal: bool = True, softcap: float = 0.0,
+                    impl: str = "pallas"):
+    """q: [B, H, S, d]; k,v: [B, KV, T, d] -> [B, H, S, d]."""
+    if impl == "xla" or (softcap > 0):
+        return ref.flash_attention_ref(q, k, v, causal=causal, softcap=softcap)
+    bq = _pick_block(q.shape[2])
+    bk = _pick_block(k.shape[2])
+    return _flash_pallas(q, k, v, causal=causal, block_q=bq, block_k=bk)
+
+
+def decode_attention(q, k, v, length, impl: str = "pallas"):
+    """q: [B, H, d]; k,v: [B, KV, T, d] -> [B, H, d]."""
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k, v, length)
+    bk = _pick_block(k.shape[2], want=256)
+    return _decode_pallas(q, k, v, length, block_k=bk)
+
+
+def fused_rmsnorm(x, scale, eps: float = 1e-6, impl: str = "pallas"):
+    if impl == "xla":
+        return ref.rmsnorm_ref(x, scale, eps)
+    return _rmsnorm_pallas(x, scale, eps)
+
+
+def ssd_scan(xb, Bm, Cm, ld, chunk: int = 128, impl: str = "pallas"):
+    """xb: [B, H, S, dh] head-major.  Returns (y [B,H,S,dh], h [B,H,dh,ds])."""
+    if impl == "xla":
+        y, h = ref.ssd_scan_ref(jnp.moveaxis(xb, 1, 2), Bm, Cm,
+                                jnp.moveaxis(ld, 1, 2))
+        return jnp.moveaxis(y, 1, 2), h
+    return _ssd_pallas(xb, Bm, Cm, ld, chunk=chunk)

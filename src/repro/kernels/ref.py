@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the semantic ground truth the kernels must match under
+``np.testing.assert_allclose`` across shape/dtype sweeps (see
+tests/test_kernels.py).  No tiling, no VMEM reasoning — just math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, softcap: float = 0.0):
+    """q: [B, H, S, d]; k,v: [B, KV, T, d] (GQA: H multiple of KV).
+    Returns [B, H, S, d]."""
+    B, H, S, d = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / np.sqrt(d)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None] + (T - S)
+        scores = jnp.where(mask[None, None, None], scores,
+                           jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(B, H, S, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length):
+    """One-token attention against a KV cache.
+
+    q: [B, H, d]; k,v: [B, KV, T, d]; length: scalar or [B] — number of
+    valid cache positions.  Returns [B, H, d]."""
+    B, H, d = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32))
+    scores = scores / np.sqrt(d)
+    length = jnp.asarray(length)
+    valid = jnp.arange(T)[None, :] < jnp.reshape(length, (-1, 1))
+    scores = jnp.where(valid[:, None, None, :], scores,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """x: [..., d]; scale: [d]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def ssd_scan_ref(xb, B_mat, C_mat, log_decay, h0=None):
+    """Sequential scalar-decay SSD reference (exact recurrence).
+
+    xb: [B, S, H, dh]; B_mat, C_mat: [B, S, ds]; log_decay: [B, S, H].
+    Returns (y [B, S, H, dh], h_final [B, H, dh, ds]), both float32.
+    """
+    Bb, S, H, dh = xb.shape
+    ds = B_mat.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, dh, ds), f32)
+
+    def step(h, inp):
+        xb_t, b_t, c_t, ld_t = inp
+        h = jnp.exp(ld_t)[:, :, None, None] * h + jnp.einsum(
+            "bs,bhd->bhds", b_t.astype(f32), xb_t.astype(f32))
+        y_t = jnp.einsum("bs,bhds->bhd", c_t.astype(f32), h)
+        return h, y_t
+
+    hK, ys = jax.lax.scan(
+        step, h0.astype(f32),
+        (jnp.moveaxis(xb, 1, 0), jnp.moveaxis(B_mat, 1, 0),
+         jnp.moveaxis(C_mat, 1, 0), jnp.moveaxis(log_decay.astype(f32), 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hK

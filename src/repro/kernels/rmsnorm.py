@@ -1,0 +1,56 @@
+"""Fused RMSNorm as a Pallas TPU kernel.
+
+RMSNorm is bandwidth-bound; the fusion wins by reading x once per row tile
+(HBM->VMEM), computing the fp32 mean-square + rsqrt + scale in registers,
+and writing the result once — vs the naive lowering's separate square /
+reduce / mul passes.  Rows are tiled [br, d] with d whole (d_model up to
+8192 fits VMEM at fp32: 8192*4B*br=128 -> 4 MiB)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                  # [br, d]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, block_rows: int = 128,
+            interpret: bool | None = None):
+    """x: [..., d]; scale: [d] -> same shape as x."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    # pad rows to a multiple of the tile
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    nr = x2.shape[0] // br
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Test-only override (must still happen before jax initializes devices).
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, with 512 placeholder host devices.
+
+For each cell this produces a JSON artifact under artifacts/dryrun/ with:
+  * memory analysis (per-device argument/output/temp bytes; XLA's own
+    numbers when the backend provides them, plus an analytic per-device
+    estimate from the sharding specs),
+  * cost analysis (per-partition FLOPs / bytes accessed),
+  * collective bytes parsed from the partitioned HLO,
+  * the three roofline terms + dominant bottleneck (TPU v5e constants).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch import roofline as rl
+from repro.models.registry import SHAPES, cells, get_model
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+from repro.utils import fmt_bytes, leaf_bytes
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# Big models need ZeRO-3 param sharding over the data axes; threshold is
+# bytes-per-model-shard that still fits comfortably next to activations.
+FSDP_THRESHOLD = 2 << 30
+# Factored second moment for very large models (deepseek-v3): the
+# distributed-optimization trick that fits optimizer state in v5e HBM.
+FACTORED_THRESHOLD = 100e9
+
+
+def _spec_to_json(tree):
+    return jax.tree.map(
+        lambda s: str(s), tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _per_device_bytes(shape_tree, spec_tree, mesh) -> int:
+    """Analytic per-device bytes given shardings (memory_analysis fallback
+    and cross-check)."""
+    total = 0
+    flat_t = jax.tree_util.tree_leaves(shape_tree)
+    flat_s = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(flat_t, flat_s):
+        n = leaf_bytes(leaf)
+        for names in spec:
+            if names is None:
+                continue
+            n //= shd._axis_size(mesh, names)
+        total += n
+    return total
+
+
+def build_cell(arch: str, shape_name: str, mesh, fsdp: Optional[bool] = None,
+               overrides: Optional[dict] = None):
+    """Returns (jitted_fn, arg_specs, meta) ready to lower.
+
+    overrides (hillclimb knobs, recorded in the artifact):
+      cache_prefer_seq: bool — flash-decoding cache sharding (§Perf #1)
+      fsdp: bool — force ZeRO-3 on/off
+      remat: bool — override activation checkpointing
+      moe_constraints: bool — EP sharding constraints on the dispatch path
+    """
+    overrides = overrides or {}
+    model = get_model(arch)
+    cfg_over = {k: v for k, v in overrides.items()
+                if k in ("remat", "moe_shard_constraints",
+                         "attn_seq_shard_constraint", "attn_sp_prefill",
+                         "fused_glu", "fused_qkv")}
+    if cfg_over:
+        from repro.models.registry import Model
+        model = Model(model.cfg.replace(**cfg_over))
+    cfg = model.cfg
+    sh = SHAPES[shape_name]
+    mode, seq, batch = sh["mode"], sh["seq"], sh["batch"]
+    dt = jnp.bfloat16
+    prefer_seq = overrides.get("cache_prefer_seq", False)
+    if "fsdp" in overrides:
+        fsdp = overrides["fsdp"]
+
+    params = model.init_params(abstract=True, dtype=dt)
+    pbytes = sum(leaf_bytes(l) for l in jax.tree.leaves(params))
+    if fsdp is None:
+        fsdp = pbytes / mesh.shape["model"] > FSDP_THRESHOLD
+    p_specs = shd.param_specs(model, mesh, fsdp=fsdp,
+                              mode=overrides.get("param_mode", "tp"))
+
+    meta = {"arch": arch, "shape": shape_name, "mode": mode,
+            "seq": seq, "batch": batch, "fsdp": fsdp,
+            "param_bytes": pbytes, "overrides": overrides,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape))}
+
+    if mode == "train":
+        factored = pbytes > FACTORED_THRESHOLD
+        opt_cfg = OptimizerConfig(state_dtype="bfloat16", factored=factored)
+        meta["optimizer"] = {"state_dtype": "bfloat16", "factored": factored}
+        opt = init_opt_state(params, opt_cfg)
+        state = {"params": params, "opt": opt}
+        o_specs = shd.opt_state_specs(p_specs, mesh, opt_state=opt)
+        state_specs = {"params": p_specs, "opt": o_specs}
+        batch_tree = model.input_specs("train", batch, seq, dtype=dt)
+        b_specs = shd.batch_specs(batch_tree, mesh)
+        fn = make_train_step(model, opt_cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(shd.to_named(state_specs, mesh),
+                          shd.to_named(b_specs, mesh)),
+            out_shardings=(shd.to_named(state_specs, mesh), None),
+            donate_argnums=(0,))
+        args = (state, batch_tree)
+        arg_specs = (state_specs, b_specs)
+        state_bytes = _per_device_bytes(state, state_specs, mesh)
+        meta["state_bytes_per_device"] = state_bytes
+
+    elif mode == "prefill":
+        cache = model.make_cache(batch, seq, abstract=True, dtype=dt)
+        c_specs = shd.cache_specs(
+            model, cache, mesh, batch, prefer_seq=prefer_seq,
+            replicate_model=overrides.get("cache_replicate_model", False))
+        inputs = model.input_specs("prefill", batch, seq, dtype=dt)
+        i_specs = shd.batch_specs(inputs, mesh,
+                                  seq_parallel=overrides.get("seq_parallel",
+                                                             False))
+        fn = lambda p, i, c: model.prefill(p, i, c)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(shd.to_named(p_specs, mesh),
+                          shd.to_named(i_specs, mesh),
+                          shd.to_named(c_specs, mesh)),
+            donate_argnums=(2,))
+        args = (params, inputs, cache)
+        arg_specs = (p_specs, i_specs, c_specs)
+        meta["state_bytes_per_device"] = (
+            _per_device_bytes(params, p_specs, mesh)
+            + _per_device_bytes(cache, c_specs, mesh))
+
+    else:  # decode
+        # confirmed hillclimb #1 defaults: flash-decoding cache sharding +
+        # no ZeRO-3 (TP-sharded params + sharded cache fit HBM; weight
+        # all-gathers would dominate an otherwise memory-bound step)
+        prefer_seq = overrides.get("cache_prefer_seq", True)
+        if "fsdp" not in overrides and fsdp:
+            fsdp = False
+            meta["fsdp"] = False
+            p_specs = shd.param_specs(model, mesh, fsdp=False,
+                                      mode=overrides.get("param_mode", "tp"))
+        cache = model.make_cache(batch, seq, abstract=True, dtype=dt)
+        c_specs = shd.cache_specs(model, cache, mesh, batch,
+                                  prefer_seq=prefer_seq)
+        inputs = model.input_specs("decode", batch, seq, dtype=dt)
+        i_specs = shd.batch_specs(inputs, mesh)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = lambda p, c, i, t: model.decode_step(p, c, i, t)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(shd.to_named(p_specs, mesh),
+                          shd.to_named(c_specs, mesh),
+                          shd.to_named(i_specs, mesh),
+                          NamedSharding(mesh, P())),
+            donate_argnums=(1,))
+        args = (params, cache, inputs, pos)
+        arg_specs = (p_specs, c_specs, i_specs, P())
+        meta["state_bytes_per_device"] = (
+            _per_device_bytes(params, p_specs, mesh)
+            + _per_device_bytes(cache, c_specs, mesh))
+
+    return jitted, args, arg_specs, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             mesh=None, verbose: bool = True,
+             overrides: Optional[dict] = None) -> dict:
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    with mesh:
+        jitted, args, arg_specs, meta = build_cell(arch, shape_name, mesh,
+                                                   overrides=overrides)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # --- memory analysis -------------------------------------------------
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+    except Exception as e:           # backend without memory analysis
+        mem["error"] = repr(e)
+    mem["analytic_state_bytes_per_device"] = meta["state_bytes_per_device"]
+
+    # --- cost analysis + collectives --------------------------------------
+    try:
+        cost = compiled.cost_analysis()
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds")}
+    except Exception as e:
+        cost = {"error": repr(e)}
+    hlo = compiled.as_text()
+    cfg = get_model(arch).cfg
+    coll = rl.collective_bytes(hlo, trips=rl.scan_trips(cfg))
+
+    from repro.launch.analytic_cost import step_cost
+    sc = step_cost(arch, shape_name)
+    mf = rl.model_flops_estimate(arch, meta["mode"], meta["batch"],
+                                 meta["seq"])
+    terms = rl.terms_from_analytic(sc.flops, sc.hbm_bytes,
+                                   coll["total_bytes"], n_chips, mf)
+
+    artifact = {
+        "meta": meta,
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+        "memory": mem,
+        "cost_analysis_raw": cost,
+        "analytic": {"flops_global": sc.flops,
+                     "hbm_bytes_global": sc.hbm_bytes},
+        "collectives": coll,
+        "model_flops_global": mf,
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "useful_ratio": terms.useful_ratio,
+            "roofline_fraction": terms.roofline_fraction,
+        },
+        "shardings": {"note": "see arg_specs", },
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        r = artifact["roofline"]
+        print(f"[{arch} x {shape_name} x {'x'.join(map(str, mesh.devices.shape))}] "
+              f"compile={t_compile:.1f}s "
+              f"state/dev={fmt_bytes(meta['state_bytes_per_device'])} "
+              f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+              f"coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']} "
+              f"frac={r['roofline_fraction']:.3f}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: {cost}")
+    return artifact
+
+
+def artifact_path(arch: str, shape_name: str, multi_pod: bool) -> str:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape_name}__{mesh_tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in todo:
+        path = artifact_path(arch, shape_name, args.multi_pod)
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {arch} x {shape_name} (exists)")
+            continue
+        try:
+            art = run_cell(arch, shape_name, multi_pod=args.multi_pod)
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+        except Exception:
+            traceback.print_exc()
+            failures.append((arch, shape_name))
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete:", len(todo), "cells")
+
+
+if __name__ == "__main__":
+    main()

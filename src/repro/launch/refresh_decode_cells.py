@@ -1,0 +1,20 @@
+"""Re-run all decode/long cells with the confirmed hillclimb #1 defaults."""
+import json
+import repro.launch.dryrun as dr
+from repro.models.registry import SHAPES, cells
+
+def main():
+    for multi_pod in (False, True):
+        for arch, shape in cells():
+            if SHAPES[shape]["mode"] != "decode":
+                continue
+            art = dr.run_cell(arch, shape, multi_pod=multi_pod, verbose=False)
+            json.dump(art, open(dr.artifact_path(arch, shape, multi_pod), "w"),
+                      indent=1)
+            r = art["roofline"]
+            print(f"{arch} x {shape} x {'2pod' if multi_pod else '1pod'}: "
+                  f"mem={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
+                  f"dom={r['dominant']}")
+
+if __name__ == "__main__":
+    main()

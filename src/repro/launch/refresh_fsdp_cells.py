@@ -1,0 +1,22 @@
+"""Re-run the fsdp-affected cells with the final solver (both meshes)."""
+import json
+import repro.launch.dryrun as dr
+from repro.models.registry import SHAPES, cells, get_model
+
+AFFECTED = {"qwen2.5-32b", "chameleon-34b", "phi3.5-moe-42b-a6.6b",
+            "deepseek-v3-671b"}
+
+def main():
+    for multi_pod in (False, True):
+        for arch, shape in cells():
+            if arch not in AFFECTED:
+                continue
+            art = dr.run_cell(arch, shape, multi_pod=multi_pod, verbose=False)
+            p = dr.artifact_path(arch, shape, multi_pod)
+            json.dump(art, open(p, "w"), indent=1)
+            r = art["roofline"]
+            print(f"refreshed {arch} x {shape} x {'2pod' if multi_pod else '1pod'}: "
+                  f"coll={r['collective_s']*1e3:.0f}ms dom={r['dominant']}")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def load_artifacts(mesh_tag: str, base: str = None) -> list:
+    rows = []
+    d = base or ART
+    for p in sorted(glob.glob(os.path.join(d, f"*__{mesh_tag}.json"))):
+        rows.append(json.load(open(p)))
+    return rows
+
+
+BASELINE_ART = ART.replace("dryrun", "dryrun_baseline")
+
+
+def inject_experiments_md(path: str) -> None:
+    """Fill the <!-- *_TABLE --> placeholders in EXPERIMENTS.md."""
+    with open(path) as f:
+        text = f.read()
+    tables = {
+        "<!-- BASELINE_TABLE -->": roofline_md("16x16", base=BASELINE_ART),
+        "<!-- OPT_TABLE -->": roofline_md("16x16"),
+        "<!-- MULTIPOD_TABLE -->": roofline_md("2x16x16"),
+    }
+    for marker, table in tables.items():
+        if marker in text:
+            text = text.replace(marker, table)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def roofline_md(mesh_tag: str = "16x16", base: str = None) -> str:
+    arts = load_artifacts(mesh_tag, base=base)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    arts.sort(key=lambda a: (order[a["meta"]["shape"]], a["meta"]["arch"]))
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | 6ND/HLO | roofline frac | state GiB/dev | compile (s) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in arts:
+        m, r = a["meta"], a["roofline"]
+        lines.append(
+            f"| {m['arch']} | {m['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{a['memory']['analytic_state_bytes_per_device']/2**30:.2f} | "
+            f"{a['timing']['compile_s']:.1f} |")
+    return "\n".join(lines)
+
+
+def memory_md(mesh_tag: str = "16x16") -> str:
+    arts = load_artifacts(mesh_tag)
+    lines = [
+        "| arch | shape | args GiB/dev | temp GiB/dev (CPU-backend) | "
+        "analytic state GiB/dev | fits v5e 16 GiB? |",
+        "|---|---|---|---|---|---|",
+    ]
+    for a in arts:
+        m = a["meta"]
+        mem = a["memory"]
+        arg = mem.get("argument_size_in_bytes", 0) / 2**30
+        tmp = mem.get("temp_size_in_bytes", 0) / 2**30
+        st = mem["analytic_state_bytes_per_device"] / 2**30
+        fits = "yes" if st < 14 else ("tight" if st < 16 else "NO")
+        lines.append(f"| {m['arch']} | {m['shape']} | {arg:.2f} | {tmp:.1f} | "
+                     f"{st:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "--inject":
+        inject_experiments_md(sys.argv[2])
+        print("injected tables into", sys.argv[2])
+    else:
+        tag = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+        print(roofline_md(tag))

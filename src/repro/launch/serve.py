@@ -1,0 +1,116 @@
+"""Serving driver: deploy LLM functions on the full TIDAL stack and serve
+a request stream end-to-end (live on CPU with reduced configs; the same
+code path serves full configs on a real TPU slice).
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch smollm-135m --functions 3 --requests 12 --lora
+
+Pipeline per request: process-pool acquire (pre-warmed executables) ->
+adaptive fork from the template (static reuse / dynamic replay) ->
+layer-streamed prefill overlapped with weight arrival -> decode loop ->
+Eq.1 TTFT feedback into the template size.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api as tidal
+from repro.core.prewarm import ExecutableCache, ProcessPool, prewarm_function
+from repro.core.streaming import streamed_prefill, supports_streamed_prefill
+from repro.core.template_server import TemplateServer
+from repro.data.pipeline import make_prompts
+from repro.models.registry import get_smoke_model
+from repro.runtime.engine import sample_greedy
+from repro.utils import fmt_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--functions", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--lora", action="store_true",
+                    help="deploy dynamic (LoRA) function variants")
+    ap.add_argument("--layers", type=int, default=6,
+                    help="reduced depth for live CPU execution")
+    args = ap.parse_args()
+
+    model = get_smoke_model(args.arch, n_layers=args.layers)
+    srv = TemplateServer(trace_batch=1, trace_seq=args.prompt_len)
+    cache = ExecutableCache()
+    pool = ProcessPool(size=2, cache=cache)
+
+    fn_keys = {}
+    rng = np.random.default_rng(0)
+    for i in range(args.functions):
+        params = model.init_params(jax.random.PRNGKey(i))
+        name = f"fn-{i}"
+        if args.lora:
+            fn = tidal.lora_function(name, model, params,
+                                     ["blocks.attn.wq"], n_adapters=3)
+            srv.register(fn, {"adapter": "adapter-0"})
+        else:
+            fn = tidal.static_function(name, model, params)
+            srv.register(fn, {})
+        fn_keys[name] = prewarm_function(cache, model, name, batch=1,
+                                         seq=args.prompt_len,
+                                         max_len=args.prompt_len + args.max_new)
+    pool.prewarm_for_functions(fn_keys)
+    print(f"deployed {args.functions} function(s); pre-warmed "
+          f"{cache.stats.misses} executables in {cache.stats.compile_s:.1f}s")
+
+    ttfts = []
+    for r in range(args.requests):
+        name = f"fn-{rng.integers(args.functions)}"
+        event = ({"adapter": f"adapter-{rng.integers(3)}"}
+                 if args.lora else {})
+        worker = pool.acquire()
+        t0 = time.perf_counter()
+        session, stats = srv.fork(name, event)
+        prompts = make_prompts(model.cfg.vocab_size, 1, args.prompt_len,
+                               seed=100 + r)
+        kv = model.make_cache(1, args.prompt_len + args.max_new)
+        if supports_streamed_prefill(model):
+            logits, kv = streamed_prefill(
+                session, {"tokens": jnp.asarray(prompts)}, kv)
+        else:
+            logits, kv = model.prefill(session.params(),
+                                       {"tokens": jnp.asarray(prompts)}, kv)
+        tok = sample_greedy(logits)
+        ttft = time.perf_counter() - t0
+        params = session.params()
+        out = [int(tok[0])]
+        for i in range(1, args.max_new):
+            logits, kv = model.decode_step(
+                params, kv, {"tokens": tok[:, None]},
+                jnp.int32(args.prompt_len + i - 1))
+            tok = sample_greedy(logits)
+            out.append(int(tok[0]))
+        total = time.perf_counter() - t0
+        srv.observe_ttft(name, ttft)
+        if worker is not None:
+            pool.release(worker)
+        ttfts.append(ttft)
+        print(f"req{r:02d} {name} {'(' + event.get('adapter', '') + ')' if args.lora else '':14s}"
+              f" ttft={ttft*1e3:7.1f}ms total={total*1e3:7.1f}ms "
+              f"reused={fmt_bytes(stats.reused_bytes):>10} "
+              f"streamed={fmt_bytes(stats.streamed_bytes):>10} "
+              f"dyn={fmt_bytes(stats.dynamic_bytes):>9} tokens={out[:4]}...")
+
+    print(f"\np50 ttft {np.percentile(ttfts, 50)*1e3:.1f}ms  "
+          f"p95 {np.percentile(ttfts, 95)*1e3:.1f}ms  "
+          f"(first request pays template registration warmup; later forks "
+          f"reuse resident prefixes as Eq.1 adapts: "
+          f"{[fmt_bytes(t.resident_bytes) for t in srv.templates.values()]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Training driver CLI: any assigned arch, fault-tolerant loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 100 --smoke --ckpt-dir /tmp/ckpt
+
+``--smoke`` uses the reduced config (live CPU); without it the full config
+trains (intended for a real TPU slice; on this container it is only
+feasible for the smallest archs).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.data.pipeline import DataConfig
+from repro.models.registry import Model, get_config, get_smoke_model
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_loop import TrainLoopConfig, train
+from repro.utils import tree_param_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--factored", action="store_true",
+                    help="Adafactor-style factored second moment")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    if args.smoke:
+        model = get_smoke_model(args.arch)
+    else:
+        model = Model(get_config(args.arch).replace(dtype="float32"))
+    n = tree_param_count(model.init_params(abstract=True))
+    print(f"{model.cfg.name}: {n/1e6:.1f}M params")
+
+    data = DataConfig(vocab_size=model.cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    opt = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          factored=args.factored)
+    loop = TrainLoopConfig(total_steps=args.steps,
+                           ckpt_every=args.ckpt_every,
+                           ckpt_dir=args.ckpt_dir, log_every=10)
+    state, losses = train(model, opt, data, loop)
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

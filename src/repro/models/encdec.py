@@ -1,0 +1,291 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_enc, D].  The transformer backbone is
+implemented fully: bidirectional encoder, causal decoder with cross-attention,
+sinusoidal encoder positions, learned decoder positions, pre-LayerNorm
+(whisper uses LayerNorm with bias, not RMSNorm).
+
+Decode caches: decoder self-attn KV (max_dec_len) + precomputed cross KV over
+the encoder states (length S_enc = the shape's seq_len, i.e. the big cache).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ParamFactory, _sdpa, layernorm, make_mlp_params)
+
+
+def _ln_params(pf: ParamFactory, d: int) -> dict:
+    return {"scale": pf((d,), init="ones"), "bias": pf((d,), init="zeros")}
+
+
+def _mha_params(pf: ParamFactory, d: int, h: int, hd: int) -> dict:
+    return {"wq": pf((d, h * hd)), "bq": pf((h * hd,), init="zeros"),
+            "wk": pf((d, h * hd)),
+            "wv": pf((d, h * hd)), "bv": pf((h * hd,), init="zeros"),
+            "wo": pf((h * hd, d)), "bo": pf((d,), init="zeros")}
+
+
+def _mlp2_params(pf: ParamFactory, d: int, f: int) -> dict:
+    return {"w1": pf((d, f)), "b1": pf((f,), init="zeros"),
+            "w2": pf((f, d)), "b2": pf((d,), init="zeros")}
+
+
+def _mlp2(p, x):
+    return jnp.einsum("bsf,fd->bsd",
+                      jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"],
+                                  approximate=True),
+                      p["w2"]) + p["b2"]
+
+
+def _proj_qkv(p, xq, xkv, H, hd):
+    B, S, _ = xq.shape
+    T = xkv.shape[1]
+    q = (jnp.einsum("bsd,de->bse", xq, p["wq"]) + p["bq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("btd,de->bte", xkv, p["wk"]).reshape(B, T, H, hd)
+    v = (jnp.einsum("btd,de->bte", xkv, p["wv"]) + p["bv"]).reshape(B, T, H, hd)
+    return q, k, v
+
+
+def _mha(p, xq, xkv, H, hd, causal: bool, positions=None,
+         kv_cache=None, cache_pos=None):
+    """Full MHA with optional kv cache (self-attn decode)."""
+    B, S, _ = xq.shape
+    q, k, v = _proj_qkv(p, xq, xkv, H, hd)
+    if kv_cache is not None:
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                                          (0, cache_pos, 0, 0))
+        T = ck.shape[1]
+        mask = (jnp.arange(T)[None, None, None, None, :]
+                <= positions[:, :, None, None, None])
+        out = _sdpa(q.reshape(B, S, H, 1, hd), ck, cv, mask)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        T = k.shape[1]
+        if causal:
+            mask = (jnp.arange(T)[None, None, None, None, :]
+                    <= jnp.arange(S)[None, :, None, None, None])
+        else:
+            mask = jnp.ones((1, 1, 1, 1, T), bool)
+        out = _sdpa(q.reshape(B, S, H, 1, hd), k, v, mask)
+        new_cache = None
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]) + p["bo"], new_cache
+
+
+def _cross_mha_cached(p, xq, H, hd, cross_kv):
+    """Cross-attention against precomputed encoder K/V."""
+    B, S, _ = xq.shape
+    q = (jnp.einsum("bsd,de->bse", xq, p["wq"]) + p["bq"]).reshape(B, S, H, hd)
+    k, v = cross_kv["k"], cross_kv["v"]
+    T = k.shape[1]
+    mask = jnp.ones((1, 1, 1, 1, T), bool)
+    out = _sdpa(q.reshape(B, S, H, 1, hd), k, v, mask).reshape(B, S, H * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]) + p["bo"]
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    log_timescale = np.log(10000) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng: Optional[jax.Array] = None,
+                abstract: bool = False, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    D, H, hd, F, V = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff, cfg.vocab_size
+    Le, Ld = cfg.n_layers, cfg.dec_layers
+
+    def pf_for(i):
+        return ParamFactory(jax.random.fold_in(rng, i), dt, abstract)
+
+    def stack(n, make_one, base):
+        trees = [make_one(pf_for(base + i)) for i in range(n)]
+        return jax.tree.map(
+            lambda *ls: (jax.ShapeDtypeStruct((n,) + ls[0].shape, ls[0].dtype)
+                         if isinstance(ls[0], jax.ShapeDtypeStruct)
+                         else jnp.stack(ls)), *trees)
+
+    def enc_block(pf):
+        return {"ln1": _ln_params(pf, D), "attn": _mha_params(pf, D, H, hd),
+                "ln2": _ln_params(pf, D), "mlp": _mlp2_params(pf, D, F)}
+
+    def dec_block(pf):
+        return {"ln1": _ln_params(pf, D), "self_attn": _mha_params(pf, D, H, hd),
+                "ln2": _ln_params(pf, D), "cross_attn": _mha_params(pf, D, H, hd),
+                "ln3": _ln_params(pf, D), "mlp": _mlp2_params(pf, D, F)}
+
+    top = pf_for(9999)
+    return {
+        "embed": top((V, D), scale=0.02),                 # decoder tokens (tied head)
+        "dec_pos": top((cfg.max_dec_len, D), scale=0.01),
+        "enc_blocks": stack(Le, enc_block, 0),
+        "dec_blocks": stack(Ld, dec_block, 1000),
+        "enc_ln": _ln_params(top, D),
+        "dec_ln": _ln_params(top, D),
+    }
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False, dtype=None):
+    """max_len = encoder length (cross kv); decoder self cache = max_dec_len."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    Ld, H, hd = cfg.dec_layers, cfg.n_heads, cfg.head_dim
+
+    def mk(shape):
+        shape = tuple(int(s) for s in shape)
+        return jax.ShapeDtypeStruct(shape, dt) if abstract else jnp.zeros(shape, dt)
+
+    return {
+        "self_kv": {"k": mk((Ld, batch, cfg.max_dec_len, H, hd)),
+                    "v": mk((Ld, batch, cfg.max_dec_len, H, hd))},
+        "cross_kv": {"k": mk((Ld, batch, max_len, H, hd)),
+                     "v": mk((Ld, batch, max_len, H, hd))},
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames: jax.Array):
+    """frames: [B, S_enc, D] precomputed embeddings (frontend stub)."""
+    B, S, D = frames.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = frames + jnp.asarray(sinusoids(S, D), frames.dtype)[None]
+
+    def body(h, bp):
+        a, _ = _mha(bp["attn"], layernorm(h, bp["ln1"]["scale"], bp["ln1"]["bias"]),
+                    layernorm(h, bp["ln1"]["scale"], bp["ln1"]["bias"]), H, hd,
+                    causal=False)
+        h = h + a
+        h = h + _mlp2(bp["mlp"], layernorm(h, bp["ln2"]["scale"], bp["ln2"]["bias"]))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layernorm(x, params["enc_ln"]["scale"], params["enc_ln"]["bias"])
+
+
+def decode_full(params, cfg: ModelConfig, enc: jax.Array, tokens: jax.Array):
+    """Teacher-forced decoder pass (training). tokens: [B, S_dec]."""
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][None, :S]
+
+    def body(h, bp):
+        a, _ = _mha(bp["self_attn"],
+                    layernorm(h, bp["ln1"]["scale"], bp["ln1"]["bias"]),
+                    layernorm(h, bp["ln1"]["scale"], bp["ln1"]["bias"]),
+                    H, hd, causal=True)
+        h = h + a
+        hq = layernorm(h, bp["ln2"]["scale"], bp["ln2"]["bias"])
+        ca, _ = _mha(bp["cross_attn"], hq, enc, H, hd, causal=False)
+        h = h + ca
+        h = h + _mlp2(bp["mlp"], layernorm(h, bp["ln3"]["scale"], bp["ln3"]["bias"]))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    x = layernorm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"])
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+
+def forward(params, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array,
+            training: bool = True):
+    enc = encode(params, cfg, frames)
+    logits = decode_full(params, cfg, enc, tokens)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array,
+            cache):
+    """Encode audio + teacher-force the prompt tokens, filling both caches."""
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    enc = encode(params, cfg, frames)
+
+    # Precompute cross KV for every decoder layer.
+    def cross_kv_body(_, bp):
+        k = jnp.einsum("btd,de->bte", enc, bp["cross_attn"]["wk"])
+        v = (jnp.einsum("btd,de->bte", enc, bp["cross_attn"]["wv"])
+             + bp["cross_attn"]["bv"])
+        T = enc.shape[1]
+        return None, {"k": k.reshape(B, T, H, hd), "v": v.reshape(B, T, H, hd)}
+
+    _, cross_kv = jax.lax.scan(cross_kv_body, None, params["dec_blocks"])
+
+    x = (jnp.take(params["embed"], tokens, axis=0)
+         + params["dec_pos"][None, :S])
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(h, xs):
+        bp, self_kv, ckv = xs
+        hq = layernorm(h, bp["ln1"]["scale"], bp["ln1"]["bias"])
+        a, new_kv = _mha(bp["self_attn"], hq, hq, H, hd, causal=True,
+                         positions=positions, kv_cache=self_kv,
+                         cache_pos=jnp.int32(0))
+        h = h + a
+        hq = layernorm(h, bp["ln2"]["scale"], bp["ln2"]["bias"])
+        h = h + _cross_mha_cached(bp["cross_attn"], hq, H, hd, ckv)
+        h = h + _mlp2(bp["mlp"], layernorm(h, bp["ln3"]["scale"], bp["ln3"]["bias"]))
+        return h, new_kv
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_blocks"],
+                                         cache["self_kv"], cross_kv))
+    x = layernorm(x[:, -1:], params["dec_ln"]["scale"], params["dec_ln"]["bias"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits[:, 0], {"self_kv": new_self, "cross_kv": cross_kv}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jax.Array,
+                pos: jax.Array):
+    """One decoder token. tokens: [B,1]; pos: scalar position in decoder seq."""
+    B = tokens.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    x = (jnp.take(params["embed"], tokens, axis=0)
+         + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1)[None])
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    def body(h, xs):
+        bp, self_kv, ckv = xs
+        hq = layernorm(h, bp["ln1"]["scale"], bp["ln1"]["bias"])
+        a, new_kv = _mha(bp["self_attn"], hq, hq, H, hd, causal=True,
+                         positions=positions, kv_cache=self_kv, cache_pos=pos)
+        h = h + a
+        hq = layernorm(h, bp["ln2"]["scale"], bp["ln2"]["bias"])
+        h = h + _cross_mha_cached(bp["cross_attn"], hq, H, hd, ckv)
+        h = h + _mlp2(bp["mlp"], layernorm(h, bp["ln3"]["scale"], bp["ln3"]["bias"]))
+        return h, new_kv
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_blocks"],
+                                         cache["self_kv"], cache["cross_kv"]))
+    x = layernorm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits[:, 0], {"self_kv": new_self, "cross_kv": cache["cross_kv"]}
+
+
+def loss_fn(params, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array,
+            labels: jax.Array, aux_weight: float = 0.0):
+    logits, _ = forward(params, cfg, frames, tokens)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,90 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus
+the decoupled RoPE key ``k_rope`` (qk_rope_dim) — the paper's core cache
+saving.  Decode attends in latent space: per-head nope keys/values are
+re-expanded from the latent via ``wkv_b`` on the fly (absorbed-matmul form is
+a hillclimb option recorded in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory, rmsnorm, rope
+
+
+def make_mla_params(pf: ParamFactory, cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": pf((D, qr)),
+        "q_a_norm": pf((qr,), init="ones"),
+        "wq_b": pf((qr, H * (dn + dr))),
+        "wkv_a": pf((D, kvr + dr)),
+        "kv_a_norm": pf((kvr,), init="ones"),
+        "wkv_b": pf((kvr, H * (dn + dv))),
+        "wo": pf((H * dv, D)),
+    }
+
+
+def mla_attention_block(
+    p: dict,
+    x: jax.Array,                       # [B, S, D]
+    cfg: ModelConfig,
+    positions: jax.Array,               # [B, S]
+    kv_cache: Optional[dict] = None,    # {'c_kv': [B,T,kvr], 'k_rope': [B,T,dr]}
+    cache_pos: Optional[jax.Array] = None,
+):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    # --- queries (low-rank) ---
+    q_lat = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", q_lat, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed KV latent + decoupled rope key ---
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rmsnorm(kv[..., :kvr], p["kv_a_norm"], cfg.norm_eps)      # [B,S,kvr]
+    k_rope = rope(kv[..., kvr:][..., None, :], positions, cfg.rope_theta)[..., 0, :]
+
+    if kv_cache is not None:
+        cc = jax.lax.dynamic_update_slice(
+            kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype), (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(
+            kv_cache["k_rope"], k_rope.astype(kv_cache["k_rope"].dtype), (0, cache_pos, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        lat, kr = cc, cr
+        T = lat.shape[1]
+    else:
+        new_cache = None
+        lat, kr = c_kv, k_rope
+        T = S
+
+    # Re-expand per-head keys/values from the latent.
+    kvb = jnp.einsum("btr,re->bte", lat, p["wkv_b"]).reshape(B, T, H, dn + dv)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+
+    scale = 1.0 / np.sqrt(dn + dr)
+    scores = (jnp.einsum("bshd,bthd->bsht", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bsht", q_rope.astype(jnp.float32),
+                           kr.astype(jnp.float32))) * scale
+
+    kv_pos = jnp.arange(T)[None, None, None, :]
+    mask = kv_pos <= positions[:, :, None, None]
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bsht,bthd->bshd", probs, v.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * dv), p["wo"])
+    return y, new_cache

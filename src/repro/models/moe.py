@@ -1,0 +1,119 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based scatter dispatch.
+
+Design notes (GSPMD / TPU):
+  * Dispatch uses scatter into an ``[E, C, D]`` buffer rather than the GShard
+    one-hot ``[T, E, C]`` tensor — the one-hot form is O(T*E*C) memory which
+    is infeasible at deepseek-v3 scale (T ~ 1M, E = 256).
+  * Expert weights carry a leading E axis so expert parallelism is a plain
+    PartitionSpec on that axis; GSPMD inserts the all-to-all.
+  * Capacity follows the standard ``C = ceil(T * K * cf / E)`` with token
+    dropping (paper-standard), which keeps all shapes static for XLA.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory, make_mlp_params, mlp_block
+
+
+def make_moe_params(pf: ParamFactory, cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": pf((D, E), scale=1.0 / np.sqrt(D)),
+        "experts": {
+            "w_gate": pf((E, D, F)),
+            "w_up": pf((E, D, F)),
+            "w_down": pf((E, F, D)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = make_mlp_params(pf, D, F * cfg.n_shared_experts)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    # capacity beyond n_tokens is unreachable (each token occupies one slot
+    # per expert at most); cf = E/K therefore means dropless.
+    return min(max(c, 4), n_tokens)
+
+
+def _ep_constrain(t, spec):
+    """Apply an EP sharding hint (no-op unless enabled via cfg)."""
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(t, P(*spec))
+
+
+def moe_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D].
+
+    With ``cfg.moe_shard_constraints`` the dispatch path carries explicit
+    EP hints: tokens stay data-sharded, the [E, C, D] expert buffer is
+    expert-sharded over 'model' with capacity over 'data' — GSPMD then
+    lowers the scatter/gather to all-to-alls instead of replicating the
+    150 GB buffer (hillclimb #3, EXPERIMENTS.md §Perf)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = expert_capacity(T, cfg)
+    xf = x.reshape(T, D)
+    hints = cfg.moe_shard_constraints
+
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)          # [T, K]
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, k) slot within its expert's capacity buffer.
+    flat_idx = gate_idx.reshape(T * K)                   # expert id per slot
+    oh = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)    # [T*K, E]
+    pos_in_e = (jnp.cumsum(oh, axis=0) - 1)              # running count per expert
+    pos = jnp.take_along_axis(pos_in_e, flat_idx[:, None], axis=1)[:, 0]  # [T*K]
+    keep = pos < C
+
+    # Scatter tokens into the per-expert buffer [E, C, D].
+    tok_ids = jnp.repeat(jnp.arange(T), K)
+    safe_e = jnp.where(keep, flat_idx, 0)
+    safe_c = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((E, C, D), dtype=x.dtype)
+    contrib = jnp.where(keep[:, None], xf[tok_ids], 0.0)
+    buf = buf.at[safe_e, safe_c].add(contrib)
+    if hints:
+        buf = _ep_constrain(buf, ("model", None, None))
+
+    # Expert computation (einsum over the E axis -> EP shardable).
+    g = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w_up"])
+    a = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g, approximate=True)
+    out_buf = jnp.einsum("ecf,efd->ecd", a * u, p["experts"]["w_down"])
+    if hints:
+        out_buf = _ep_constrain(out_buf, ("model", None, None))
+
+    # Gather back and combine with gate weights.
+    gathered = out_buf[safe_e, safe_c]                   # [T*K, D]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    combined = (gathered.reshape(T, K, D)
+                * gate_w[..., None].astype(x.dtype)).sum(axis=1)
+
+    y = combined.reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp_block(p["shared"], x, cfg.act)
+    return y
+
+
+def moe_aux_loss(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Standard load-balancing auxiliary loss (Switch-style)."""
+    B, S, D = x.shape
+    xf = x.reshape(B * S, D)
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32), axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,161 @@
+"""Uniform model API across families.
+
+``Model`` wraps the family-specific modules behind one interface used by the
+serving runtime, the training loop, the TIDAL core and the dry-run:
+
+    m = get_model("gemma-2b")             # or get_model(cfg)
+    params = m.init_params(rng)           # or abstract=True for specs
+    logits, aux = m.forward(params, inputs)
+    loss = m.loss(params, batch)
+    logits, cache = m.prefill(params, inputs, cache)
+    logits, cache = m.decode_step(params, cache, inputs, pos)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, reduced
+from repro.models import encdec, transformer
+
+ARCH_IDS = [
+    "xlstm-1.3b",
+    "gemma-2b",
+    "qwen3-14b",
+    "qwen2.5-32b",
+    "smollm-135m",
+    "zamba2-2.7b",
+    "phi3.5-moe-42b-a6.6b",
+    "deepseek-v3-671b",
+    "chameleon-34b",
+    "whisper-medium",
+    # the paper's own evaluation models (llama family)
+    "llama3-8b",
+    "llama2-13b",
+    "llama2-70b",
+]
+
+_MODULE_FOR_ARCH = {a: a.replace(".", "_").replace("-", "_") for a in ARCH_IDS}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.cfg.is_encdec
+
+    # ---- params / cache -------------------------------------------------
+    def init_params(self, rng=None, abstract: bool = False, dtype=None):
+        mod = encdec if self.is_encdec else transformer
+        return mod.init_params(self.cfg, rng, abstract=abstract, dtype=dtype)
+
+    def make_cache(self, batch: int, max_len: int, abstract: bool = False,
+                   dtype=None):
+        mod = encdec if self.is_encdec else transformer
+        return mod.make_cache(self.cfg, batch, max_len, abstract=abstract,
+                              dtype=dtype)
+
+    # ---- training --------------------------------------------------------
+    def forward(self, params, inputs: dict, training: bool = True):
+        if self.is_encdec:
+            return encdec.forward(params, self.cfg, inputs["frames"],
+                                  inputs["tokens"], training)
+        return transformer.forward(params, self.cfg, inputs["tokens"], training)
+
+    def loss(self, params, batch: dict):
+        if self.is_encdec:
+            return encdec.loss_fn(params, self.cfg, batch["frames"],
+                                  batch["tokens"], batch["labels"])
+        return transformer.loss_fn(params, self.cfg, batch["tokens"],
+                                   batch["labels"])
+
+    # ---- serving -----------------------------------------------------------
+    def prefill(self, params, inputs: dict, cache):
+        if self.is_encdec:
+            return encdec.prefill(params, self.cfg, inputs["frames"],
+                                  inputs["tokens"], cache)
+        return transformer.prefill(params, self.cfg, inputs["tokens"], cache)
+
+    def decode_step(self, params, cache, inputs: dict, pos):
+        pos = jnp.asarray(pos, jnp.int32)
+        if self.is_encdec:
+            return encdec.decode_step(params, self.cfg, cache,
+                                      inputs["tokens"], pos)
+        return transformer.decode_step(params, self.cfg, cache,
+                                       inputs["tokens"], pos)
+
+    # ---- shape stand-ins for the dry-run ---------------------------------
+    def input_specs(self, mode: str, batch: int, seq: int,
+                    dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input.
+
+        modes: 'train' (tokens+labels), 'prefill' (prompt), 'decode' (1 tok).
+        The modality frontend stubs surface here: whisper gets precomputed
+        frame embeddings; chameleon's VQ tokens are ordinary ids in its fused
+        vocab (so plain token specs).
+        """
+        i32 = jnp.int32
+        if self.is_encdec:
+            dec_len = min(self.cfg.max_dec_len, seq)
+            if mode == "train":
+                return {"frames": jax.ShapeDtypeStruct((batch, seq, self.cfg.d_model), dtype),
+                        "tokens": jax.ShapeDtypeStruct((batch, dec_len), i32),
+                        "labels": jax.ShapeDtypeStruct((batch, dec_len), i32)}
+            if mode == "prefill":
+                return {"frames": jax.ShapeDtypeStruct((batch, seq, self.cfg.d_model), dtype),
+                        "tokens": jax.ShapeDtypeStruct((batch, dec_len), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+        if mode == "train":
+            return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+                    "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+        if mode == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR_ARCH[arch]}")
+    return mod.CONFIG
+
+
+def get_model(arch_or_cfg) -> Model:
+    if isinstance(arch_or_cfg, ModelConfig):
+        return Model(arch_or_cfg)
+    return Model(get_config(arch_or_cfg))
+
+
+def get_smoke_model(arch: str, **extra) -> Model:
+    return Model(reduced(get_config(arch), **extra))
+
+
+# Shape set assigned to the LM pool (seq_len, global_batch).
+SHAPES = {
+    "train_4k": dict(mode="train", seq=4096, batch=256),
+    "prefill_32k": dict(mode="prefill", seq=32768, batch=32),
+    "decode_32k": dict(mode="decode", seq=32768, batch=128),
+    "long_500k": dict(mode="decode", seq=524288, batch=1),
+}
+
+
+def long_context_capable(cfg: ModelConfig) -> bool:
+    """long_500k needs sub-quadratic attention: ssm/hybrid only."""
+    return cfg.attention_kind in ("recurrent", "hybrid")
+
+
+def cells(archs=None) -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, with documented long_500k skips."""
+    out = []
+    for a in archs or ARCH_IDS[:10]:
+        cfg = get_config(a)
+        for s in SHAPES:
+            if s == "long_500k" and not long_context_capable(cfg):
+                continue
+            out.append((a, s))
+    return out

@@ -1,0 +1,411 @@
+"""Recurrent sequence mixers: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+All three share the linear-recurrence form ``state = decay * state + inp`` and
+are implemented two ways:
+
+* **chunked** (train / prefill): intra-chunk quadratic term + inter-chunk
+  ``lax.scan`` over chunk states — the SSD algorithm, compute-bound and
+  MXU-friendly (this is the form the Pallas ``ssd_scan`` kernel accelerates);
+* **step** (decode): O(1) per-token state update — this is what makes
+  ``long_500k`` runnable for the ssm/hybrid architectures.
+
+States are carried in float32 for numerical robustness; mLSTM uses the
+max-stabilized exponential gating of the xLSTM paper.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared by mamba2 / mLSTM front conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """x: [B, S, Cch]; w: [W, Cch] depthwise. Returns (y, new_state[W-1]).
+
+    With ``state`` ([B, W-1, Cch], the trailing inputs of the previous call)
+    this is streaming decode; without it the sequence is left-padded.
+    """
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, W - 1, C), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # [B, S+W-1, C]
+    y = sum(xp[:, i:i + S, :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (scalar-decay SSD)
+# ---------------------------------------------------------------------------
+
+def make_mamba2_params(pf: ParamFactory, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    H = cfg.ssm_heads
+    ds = cfg.ssm_state
+    conv_ch = d_inner + 2 * ds                      # x, B, C go through conv
+    return {
+        "in_proj": pf((D, 2 * d_inner + 2 * ds + H)),   # z, x, B, C, dt
+        "conv_w": pf((cfg.conv_width, conv_ch), scale=0.5),
+        "dt_bias": pf((H,), init="zeros"),
+        "a_log": pf((H,), init="zeros"),
+        "d_skip": pf((H,), init="ones"),
+        "norm": pf((d_inner,), init="ones"),
+        "out_proj": pf((d_inner, D)),
+    }
+
+
+def _ssd_chunked(xb, B_mat, C_mat, log_decay, chunk: int, h0=None):
+    """Chunked scalar-decay SSD.
+
+    xb:        [B, S, H, dh]   (dt-scaled inputs)
+    B_mat:     [B, S, ds]
+    C_mat:     [B, S, ds]
+    log_decay: [B, S, H]       (negative; = dt * a)
+    h0:        optional initial state [B, H, dh, ds] (float32)
+    Returns y: [B, S, H, dh], final_state: [B, H, dh, ds]  (float32)
+    """
+    Bb, S, H, dh = xb.shape
+    ds = B_mat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    K = S // Q
+
+    f32 = jnp.float32
+    xb_c = xb.reshape(Bb, K, Q, H, dh).astype(f32)
+    B_c = B_mat.reshape(Bb, K, Q, ds).astype(f32)
+    C_c = C_mat.reshape(Bb, K, Q, ds).astype(f32)
+    ld_c = log_decay.reshape(Bb, K, Q, H).astype(f32)
+
+    A_cum = jnp.cumsum(ld_c, axis=2)                      # [B,K,Q,H]
+    A_tot = A_cum[:, :, -1, :]                            # [B,K,H]
+
+    # intra-chunk: scores[b,k,h,i,j] = exp(A_i - A_j) * (C_i . B_j), j <= i
+    cb = jnp.einsum("bkis,bkjs->bkij", C_c, B_c)          # [B,K,Q,Q]
+    dec = A_cum[:, :, :, None, :] - A_cum[:, :, None, :, :]   # [B,K,Q,Q,H] (i,j)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(causal[None, None, :, :, None], jnp.exp(dec), 0.0)
+    y_intra = jnp.einsum("bkij,bkijh,bkjhd->bkihd", cb, w, xb_c)
+
+    # chunk summary state: h_k = sum_j exp(A_tot - A_j) B_j (x_j)^T
+    wj = jnp.exp(A_tot[:, :, None, :] - A_cum)            # [B,K,Q,H]
+    h_chunk = jnp.einsum("bkjh,bkjs,bkjhd->bkhds", wj, B_c, xb_c)
+
+    # inter-chunk scan over K
+    def step(h_prev, inp):
+        a_tot, h_c = inp                                   # [B,H], [B,H,dh,ds]
+        h_new = jnp.exp(a_tot)[:, :, None, None] * h_prev + h_c
+        return h_new, h_prev
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, dh, ds), f32)
+    hK, h_prevs = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(A_tot, 1, 0), jnp.moveaxis(h_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # [B,K,H,dh,ds]
+
+    y_inter = jnp.einsum("bkis,bkih,bkhds->bkihd",
+                         C_c, jnp.exp(A_cum), h_prevs)
+    y = (y_intra + y_inter).reshape(Bb, S, H, dh)
+    return y.astype(xb.dtype), hK
+
+
+def mamba2_mixer(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[dict] = None):
+    """Mamba2 block body.  x: [B, S, D].
+
+    state (decode): {'h': [B,H,dh,ds] f32, 'conv': [B,W-1,conv_ch]}.
+    Returns (y, new_state); new_state is None when state is None and S == full
+    prefill — callers wanting a prefill-built state use `return_state=True`
+    via passing a zero state.
+    """
+    B, S, D = x.shape
+    d_inner = cfg.ssm_expand * D
+    H, ds = cfg.ssm_heads, cfg.ssm_state
+    dh = d_inner // H
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xc = zxbcdt[..., d_inner:2 * d_inner + 2 * ds]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * ds:]
+
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = causal_conv1d(xc, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    xs = xc[..., :d_inner].reshape(B, S, H, dh)
+    B_mat = xc[..., d_inner:d_inner + ds]
+    C_mat = xc[..., d_inner + ds:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                       # [H]
+    log_decay = dt * a                                                 # [B,S,H]
+    xb = xs.astype(jnp.float32) * dt[..., None]
+
+    Q = min(cfg.ssm_chunk, S)
+    if S > 1 and S % Q == 0:
+        # chunked SSD path (training / prefill), seeded from `state` if given
+        h0 = state["h"].astype(jnp.float32) if state is not None else None
+        y, hK = _ssd_chunked(xb, B_mat, C_mat, log_decay, cfg.ssm_chunk, h0)
+        new_state = {"h": hK, "conv": new_conv}
+    else:
+        # single/multi-step sequential decode
+        def step(h, inp):
+            xb_t, b_t, c_t, ld_t = inp
+            h = jnp.exp(ld_t)[:, :, None, None] * h + jnp.einsum(
+                "bs,bhd->bhds", b_t, xb_t)
+            y_t = jnp.einsum("bs,bhds->bhd", c_t, h)
+            return h, y_t
+
+        h_init = (state["h"].astype(jnp.float32) if state is not None
+                  else jnp.zeros((B, H, dh, ds), jnp.float32))
+        hK, ys = jax.lax.scan(
+            step, h_init,
+            (jnp.moveaxis(xb, 1, 0), jnp.moveaxis(B_mat.astype(jnp.float32), 1, 0),
+             jnp.moveaxis(C_mat.astype(jnp.float32), 1, 0),
+             jnp.moveaxis(log_decay, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)
+        new_state = {"h": hK, "conv": new_conv}
+
+    y = y.astype(x.dtype) + xs * p["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_state
+
+
+def mamba2_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H, ds = cfg.ssm_heads, cfg.ssm_state
+    conv_ch = d_inner + 2 * ds
+    return {
+        "h": (batch, H, d_inner // H, ds),
+        "conv": (batch, cfg.conv_width - 1, conv_ch),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory, exp gating, max-stabilized)
+# ---------------------------------------------------------------------------
+
+# "empty history" value for the running max-stabilizer m.  A large negative
+# finite constant (not -inf) so that exp(m_prev - m_new) underflows to exactly
+# 0 without inf-inf NaN hazards; make_cache uses the same convention.
+EMPTY_M = -1e9
+
+def make_mlstm_params(pf: ParamFactory, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_inner = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    return {
+        "up_proj": pf((D, 2 * d_inner)),                  # x_inner, z gate
+        "conv_w": pf((cfg.conv_width, d_inner), scale=0.5),
+        "wq": pf((d_inner, d_inner)),
+        "wk": pf((d_inner, d_inner)),
+        "wv": pf((d_inner, d_inner)),
+        "w_if": pf((d_inner, 2 * H), scale=0.01),         # input / forget gates
+        "b_if": pf((2 * H,), init="zeros"),
+        "norm": pf((d_inner,), init="ones"),
+        "down_proj": pf((d_inner, D)),
+    }
+
+
+def _mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int, state=None):
+    """Stabilized chunked mLSTM.
+
+    q,k,v: [B, S, H, dh] ; i_raw,f_raw: [B, S, H].
+    state: {'C': [B,H,dh,dh], 'n': [B,H,dh], 'm': [B,H]} or None.
+    Returns (y [B,S,H,dh], final_state).
+    """
+    Bb, S, H, dh = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    K = S // Q
+    f32 = jnp.float32
+    scale = 1.0 / np.sqrt(dh)
+
+    qc = q.reshape(Bb, K, Q, H, dh).astype(f32) * scale
+    kc = k.reshape(Bb, K, Q, H, dh).astype(f32)
+    vc = v.reshape(Bb, K, Q, H, dh).astype(f32)
+    ic = i_raw.reshape(Bb, K, Q, H).astype(f32)
+    logf = jax.nn.log_sigmoid(f_raw.reshape(Bb, K, Q, H).astype(f32))
+    F_cum = jnp.cumsum(logf, axis=2)                       # [B,K,Q,H]
+    F_tot = F_cum[:, :, -1, :]
+
+    if state is None:
+        C0 = jnp.zeros((Bb, H, dh, dh), f32)
+        n0 = jnp.zeros((Bb, H, dh), f32)
+        m0 = jnp.full((Bb, H), EMPTY_M, f32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    neg_inf = jnp.finfo(f32).min
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        qq, kk, vv, ii, Fc, Ft = inp                       # per-chunk slices
+        # intra log weights W[i,j] = F_i - F_j + i_j
+        W = Fc[:, :, None, :] - Fc[:, None, :, :] + ii[:, None, :, :]   # [B,i,j,H]
+        W = jnp.where(causal[None, :, :, None], W, neg_inf)
+        inter = Fc + m_prev[:, None, :]                    # [B,i,H]
+        m_new = jnp.maximum(jnp.max(W, axis=2), inter)     # [B,i,H]
+        m_new = jnp.maximum(m_new, -30.0)                  # avoid -inf rows
+        w = jnp.exp(W - m_new[:, :, None, :])              # [B,i,j,H]
+        s = jnp.exp(inter - m_new)                         # [B,i,H]
+
+        qk = jnp.einsum("bihd,bjhd->bijh", qq, kk)
+        h_num = (jnp.einsum("bijh,bijh,bjhd->bihd", qk, w, vv)
+                 + jnp.einsum("bihd,bhde,bih->bihe", qq, C_prev, s))
+        n_vec = (jnp.einsum("bijh,bjhd->bihd", w, kk)
+                 + s[..., None] * n_prev[:, None, :, :])
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bihd,bihd->bih", qq, n_vec)),
+                            jnp.exp(-m_new))
+        y = h_num / denom[..., None]
+
+        # chunk-end state
+        Wend = Ft[:, None, :] - Fc + ii                    # [B,j,H]
+        m_end = jnp.maximum(jnp.max(Wend, axis=1), Ft + m_prev)
+        m_end = jnp.maximum(m_end, -30.0)
+        wend = jnp.exp(Wend - m_end[:, None, :])
+        send = jnp.exp(Ft + m_prev - m_end)
+        C_new = (jnp.einsum("bjh,bjhd,bjhe->bhde", wend, kk, vv)
+                 + send[:, :, None, None] * C_prev)
+        n_new = (jnp.einsum("bjh,bjhd->bhd", wend, kk)
+                 + send[..., None] * n_prev)
+        return (C_new, n_new, m_end), y
+
+    xs =(jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+          jnp.moveaxis(ic, 1, 0), jnp.moveaxis(F_cum, 1, 0), jnp.moveaxis(F_tot, 1, 0))
+    (Cn, nn, mn), ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, dh)
+    return y.astype(q.dtype), {"C": Cn, "n": nn, "m": mn}
+
+
+def mlstm_mixer(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[dict] = None):
+    """xLSTM mLSTM block body.  x: [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    d_inner = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    dh = d_inner // H
+
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xi, z = up[..., :d_inner], up[..., d_inner:]
+    conv_state = state["conv"] if state is not None else None
+    xq, new_conv = causal_conv1d(xi, p["conv_w"], conv_state)
+    xq = jax.nn.silu(xq)
+
+    q = jnp.einsum("bse,ef->bsf", xq, p["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", xq, p["wk"]).reshape(B, S, H, dh) / np.sqrt(dh)
+    v = jnp.einsum("bse,ef->bsf", xi, p["wv"]).reshape(B, S, H, dh)
+    gates = jnp.einsum("bse,eg->bsg", xi, p["w_if"]) + p["b_if"]
+    i_raw, f_raw = gates[..., :H], gates[..., H:]
+
+    inner_state = None
+    if state is not None:
+        inner_state = {"C": state["C"], "n": state["n"], "m": state["m"]}
+    y, new_inner = _mlstm_chunked(q, k, v, i_raw, f_raw, cfg.ssm_chunk, inner_state)
+
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down_proj"])
+    new_state = {"conv": new_conv, **new_inner}
+    return out, new_state
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    d_inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = d_inner // H
+    return {
+        "C": (batch, H, dh, dh),
+        "n": (batch, H, dh),
+        "m": (batch, H),
+        "conv": (batch, cfg.conv_width - 1, d_inner),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, true recurrence -> lax.scan over time)
+# ---------------------------------------------------------------------------
+
+def make_slstm_params(pf: ParamFactory, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    return {
+        "w_in": pf((D, 4 * D)),                           # z,i,f,o pre-activations
+        "r": pf((H, dh, 4 * dh), scale=0.1),              # block-diag recurrence
+        "b": pf((4 * D,), init="zeros"),
+        "norm": pf((D,), init="ones"),
+        "mlp": {
+            "w_gate": pf((D, int(4 * D / 3))),
+            "w_up": pf((D, int(4 * D / 3))),
+            "w_down": pf((int(4 * D / 3), D)),
+        },
+    }
+
+
+def slstm_mixer(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[dict] = None):
+    """sLSTM with exp input gate + stabilizer.  x: [B,S,D]."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    f32 = jnp.float32
+
+    pre = jnp.einsum("bsd,de->bse", x, p["w_in"]) + p["b"]   # [B,S,4D]
+    pre = pre.reshape(B, S, H, 4 * dh).astype(f32)
+
+    if state is None:
+        c0 = jnp.zeros((B, H, dh), f32)
+        n0 = jnp.zeros((B, H, dh), f32)
+        h0 = jnp.zeros((B, H, dh), f32)
+        m0 = jnp.zeros((B, H, dh), f32)
+    else:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+
+    r = p["r"].astype(f32)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, r)               # [B,H,4dh]
+        g = pre_t + rec
+        z_t = jnp.tanh(g[..., 0 * dh:1 * dh])
+        i_t = g[..., 1 * dh:2 * dh]
+        f_t = g[..., 2 * dh:3 * dh]
+        o_t = jax.nn.sigmoid(g[..., 3 * dh:4 * dh])
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        i_s = jnp.exp(i_t - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * z_t
+        n_new = f_s * n + i_s
+        h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (cS, nS, hS, mS), hs = jax.lax.scan(
+        step, (c0, n0, h0, m0), jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    new_state = {"c": cS, "n": nS, "h": hS, "m": mS}
+    return y, new_state
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {"c": (batch, H, dh), "n": (batch, H, dh),
+            "h": (batch, H, dh), "m": (batch, H, dh)}

@@ -1,0 +1,121 @@
+"""AdamW with global-norm clipping, pure JAX (no optax dependency).
+
+Optimizer state dtype is configurable: fp32 for quality runs, bf16 for the
+memory-fit configuration used by the giant dry-run cells (deepseek-v3 at
+train_4k) — the choice is recorded per-cell in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Optional[str] = None    # None -> same as params
+    warmup_steps: int = 100
+    # Adafactor-style factored second moment for >=2D leaves: v is stored
+    # as a (row, col) outer-product estimate over the trailing two axes —
+    # the distributed-optimization trick that makes deepseek-v3 train_4k
+    # fit v5e HBM (v: O(n+m) instead of O(n*m) per matrix).
+    factored: bool = False
+    min_factored_size: int = 128
+
+
+def _is_factorable(shape, cfg: OptimizerConfig) -> bool:
+    return (cfg.factored and len(shape) >= 2
+            and shape[-1] >= cfg.min_factored_size
+            and shape[-2] >= cfg.min_factored_size)
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else None
+
+    leaves = jax.tree.leaves(params)
+    abstract = bool(leaves) and isinstance(leaves[0], jax.ShapeDtypeStruct)
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt or dtype)
+        return jnp.zeros(shape, dt or dtype)
+
+    def m_of(p):
+        return mk(p.shape, p.dtype)
+
+    def v_of(p):
+        if _is_factorable(p.shape, cfg):
+            return {"row": mk(p.shape[:-1], jnp.float32),
+                    "col": mk(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return mk(p.shape, p.dtype)
+
+    return {
+        "m": jax.tree.map(m_of, params),
+        "v": jax.tree.map(v_of, params),
+        "step": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                 else jnp.zeros((), jnp.int32)),
+    }
+
+
+def _lr_at(step, cfg: OptimizerConfig):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptimizerConfig):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = _lr_at(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        mhat = m_new / bc1
+        if isinstance(v, dict):           # factored second moment
+            g2 = jnp.square(g) + 1e-30
+            row = b2 * v["row"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            col = b2 * v["col"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            # rank-1 reconstruction: v ~ row x col / mean(row)
+            denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)
+            vhat = (row[..., :, None] * col[..., None, :]
+                    / denom[..., None]) / bc2
+            v_new = {"row": row, "col": col}
+        else:
+            v32 = v.astype(jnp.float32)
+            v_full = b2 * v32 + (1 - b2) * jnp.square(g)
+            vhat = v_full / bc2
+            v_new = v_full.astype(v.dtype)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new
+
+    p_flat, treedef = jax.tree_util.tree_flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(opt_state["m"])
+    v_flat = treedef.flatten_up_to(opt_state["v"])   # factored dicts intact
+    out = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

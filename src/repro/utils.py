@@ -1,0 +1,77 @@
+"""Small shared utilities: pytree paths, byte accounting, dtype helpers."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def path_str(path) -> str:
+    """Render a jax.tree_util key path as 'a.b.0.c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def tree_paths_and_leaves(tree) -> list[tuple[str, Any]]:
+    return [(path_str(p), leaf) for p, leaf in jax.tree_util.tree_leaves_with_path(tree)]
+
+
+def leaf_bytes(leaf) -> int:
+    """Bytes of a leaf (works for jnp arrays, numpy arrays and ShapeDtypeStruct)."""
+    return int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize if leaf.shape else np.dtype(leaf.dtype).itemsize
+
+
+def tree_bytes(tree) -> int:
+    return sum(leaf_bytes(l) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.2f} {unit}"
+        n /= 1024
+    return f"{n:.2f} PiB"
+
+
+def fmt_time(s: float) -> str:
+    if s < 1e-3:
+        return f"{s * 1e6:.1f} us"
+    if s < 1.0:
+        return f"{s * 1e3:.1f} ms"
+    return f"{s:.3f} s"
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree):
+    """tree_map with the flattened string path as first arg."""
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(path_str(p), l), tree)
+
+
+def assert_no_nans(tree, where: str = "") -> None:
+    for path, leaf in tree_paths_and_leaves(tree):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            if bool(jnp.any(jnp.isnan(leaf))):
+                raise AssertionError(f"NaN in {where}:{path}")
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b

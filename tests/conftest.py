@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see 1 CPU device (the dry-run sets its own 512-device flag in
+# its OWN process via subprocess); never set XLA_FLAGS globally here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,192 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret mode on CPU), hypothesis property sweeps, and end-to-end model
+integration via cfg.attn_impl='pallas'."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.registry import get_smoke_model
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,S,d", [
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 8, 2, 128, 64),      # GQA 4:1
+    (1, 4, 1, 256, 128),     # MQA, big head
+    (1, 8, 8, 64, 32),       # small
+])
+def test_flash_attention_sweep(B, H, KV, S, d, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, d), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@given(bq=st.sampled_from([32, 64, 128]), bk=st.sampled_from([32, 64, 128]))
+@settings(max_examples=6, deadline=None)
+def test_flash_attention_block_shape_invariance(bq, bk):
+    """Output must not depend on the VMEM tiling."""
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,T,d", [
+    (2, 8, 2, 512, 64),
+    (1, 4, 4, 256, 128),
+    (2, 8, 1, 1024, 64),
+])
+def test_decode_attention_sweep(B, H, KV, T, d, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, KV, T, d), dtype)
+    v = jax.random.normal(ks[2], (B, KV, T, d), dtype)
+    lengths = jnp.asarray([T // 3, T][:B])
+    out = decode_attention(q, k, v, lengths, block_k=128)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@given(length=st.integers(1, 512))
+@settings(max_examples=10, deadline=None)
+def test_decode_attention_any_length(length):
+    """Masking must be exact for every cache occupancy."""
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 4, 2, 64))[:, :, 0]
+    k = jax.random.normal(ks[1], (1, 4, 512, 64))
+    v = jax.random.normal(ks[2], (1, 4, 512, 64))
+    out = decode_attention(q, k, v, length, block_k=128)
+    want = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 64), (2, 7, 96), (130, 128), (1, 256)])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(RNG, shape, dtype)
+    s = (jax.random.normal(RNG, (shape[-1],)) * 0.1 + 1.0).astype(dtype)
+    out = rmsnorm(x, s, block_rows=8)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# ssd scan (mamba2 / linear recurrence)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,dh,ds,Q", [
+    (1, 2, 64, 32, 16, 16),
+    (2, 4, 128, 64, 64, 32),
+    (1, 1, 256, 128, 64, 128),
+])
+def test_ssd_scan_sweep(B, H, S, dh, ds, Q):
+    ks = jax.random.split(RNG, 4)
+    xb = jax.random.normal(ks[0], (B, H, S, dh))
+    Bm = jax.random.normal(ks[1], (B, S, ds)) * 0.3
+    Cm = jax.random.normal(ks[2], (B, S, ds)) * 0.3
+    ld = -jnp.abs(jax.random.normal(ks[3], (B, H, S))) * 0.1
+    y, h = ssd_scan(xb, Bm, Cm, ld, chunk=Q)
+    yr, hr = ref.ssd_scan_ref(jnp.moveaxis(xb, 1, 2), Bm, Cm,
+                              jnp.moveaxis(ld, 1, 2))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.moveaxis(yr, 1, 2)),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=2e-4, rtol=2e-4)
+
+
+@given(Q=st.sampled_from([8, 16, 32, 64]))
+@settings(max_examples=4, deadline=None)
+def test_ssd_chunk_invariance(Q):
+    """The recurrence result must not depend on the chunk size."""
+    ks = jax.random.split(RNG, 4)
+    xb = jax.random.normal(ks[0], (1, 2, 64, 16))
+    Bm = jax.random.normal(ks[1], (1, 64, 8)) * 0.3
+    Cm = jax.random.normal(ks[2], (1, 64, 8)) * 0.3
+    ld = -jnp.abs(jax.random.normal(ks[3], (1, 2, 64))) * 0.1
+    y, h = ssd_scan(xb, Bm, Cm, ld, chunk=Q)
+    y1, h1 = ssd_scan(xb, Bm, Cm, ld, chunk=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h1), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end integration: cfg.attn_impl='pallas' serving path
+# ---------------------------------------------------------------------------
+
+def test_model_with_pallas_attention_matches_xla():
+    m_x = get_smoke_model("qwen3-14b", n_layers=2, head_dim=32)
+    m_p = get_smoke_model("qwen3-14b", n_layers=2, head_dim=32,
+                          attn_impl="pallas")
+    p = m_x.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              m_x.cfg.vocab_size)
+    # prefill (flash kernel) + decode (flash-decoding kernel)
+    cx = m_x.make_cache(2, 24)
+    cp = m_p.make_cache(2, 24)
+    lx, cx = m_x.prefill(p, {"tokens": toks}, cx)
+    lp, cp = m_p.prefill(p, {"tokens": toks}, cp)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lx), atol=2e-4)
+    for pos in range(16, 20):
+        t = jnp.zeros((2, 1), jnp.int32)
+        lx, cx = m_x.decode_step(p, cx, {"tokens": t}, pos)
+        lp, cp = m_p.decode_step(p, cp, {"tokens": t}, pos)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lx), atol=2e-4)
+
+
+def test_ops_fallback_on_odd_shapes():
+    """Non-2^k sequence lengths fall back to a correct path."""
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 2, 96, 64))
+    k = jax.random.normal(ks[1], (1, 2, 96, 64))
+    v = jax.random.normal(ks[2], (1, 2, 96, 64))
+    out = ops.flash_attention(q, k, v)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)

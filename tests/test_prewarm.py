@@ -1,0 +1,91 @@
+"""Proactive code loading: AOT executable cache + process pool (§5.1)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.prewarm import (ExecutableCache, ProcessPool, Worker,
+                                prewarm_function)
+from repro.data.pipeline import make_prompts
+from repro.models.registry import get_smoke_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    m = get_smoke_model("smollm-135m", n_layers=4)
+    cache = ExecutableCache()
+    keys = prewarm_function(cache, m, "fn", batch=1, seq=16, max_len=32)
+    return m, cache, keys
+
+
+def test_prewarm_compiles_serve_entry_points(setup):
+    m, cache, keys = setup
+    assert len(keys) == 2
+    assert cache.stats.misses == 2
+    assert all(k in cache for k in keys)
+
+
+def test_cache_hit_avoids_recompile(setup):
+    m, cache, keys = setup
+    before = cache.stats.compile_s
+    prewarm_function(cache, m, "fn", batch=1, seq=16, max_len=32)
+    assert cache.stats.compile_s == before       # pure hits
+    assert cache.stats.hits >= 2
+
+
+def test_prewarmed_executable_runs(setup):
+    """The AOT-compiled executable must be directly invocable — the
+    'no cold kernel call' property."""
+    m, cache, keys = setup
+    exe = cache.get_or_compile(keys[0], lambda: None)
+    params = m.init_params(jax.random.PRNGKey(0))
+    toks = jnp.asarray(make_prompts(m.cfg.vocab_size, 1, 16))
+    kv = m.make_cache(1, 32)
+    logits, kv2 = exe(params, {"tokens": toks}, kv)
+    ref, _ = m.prefill(params, {"tokens": toks}, m.make_cache(1, 32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_pool_loading_policy(setup):
+    """Workers pre-warm executables for the functions cached on this host
+    (the §5.1 policy)."""
+    m, cache, keys = setup
+    pool = ProcessPool(size=3, cache=cache)
+    pool.prewarm_for_functions({"fn": keys})
+    w = pool.acquire()
+    assert w is not None
+    assert pool.is_prewarmed(w, keys)
+    assert not pool.is_prewarmed(w, [("other", "prefill", 1, 1, 1)])
+    pool.release(w)
+
+
+def test_pool_exhaustion():
+    pool = ProcessPool(size=1, cache=ExecutableCache())
+    w = pool.acquire()
+    assert pool.acquire() is None                # empty -> cold path
+    pool.release(w)
+    assert pool.acquire() is w
+
+
+def test_first_call_pays_compile_like_cold_kernel():
+    """Sanity: compiling is orders slower than dispatching — the 'lazy
+    code loading' cost TIDAL removes from the critical path."""
+    m = get_smoke_model("smollm-135m", n_layers=2)
+    cache = ExecutableCache()
+    t0 = time.perf_counter()
+    keys = prewarm_function(cache, m, "f2", batch=1, seq=16, max_len=32)
+    compile_time = time.perf_counter() - t0
+    exe = cache.get_or_compile(keys[0], lambda: None)
+    params = m.init_params(jax.random.PRNGKey(0))
+    toks = jnp.asarray(make_prompts(m.cfg.vocab_size, 1, 16))
+    logits, _ = exe(params, {"tokens": toks}, m.make_cache(1, 32))
+    jax.block_until_ready(logits)
+    t1 = time.perf_counter()
+    logits, _ = exe(params, {"tokens": toks}, m.make_cache(1, 32))
+    jax.block_until_ready(logits)
+    dispatch_time = time.perf_counter() - t1
+    assert compile_time > 10 * dispatch_time

@@ -1,0 +1,117 @@
+"""FaaS scheduler: keep-alive, adaptive-fork keep-alive (DK), early-reject,
+locality, elastic scaling, straggler hedging."""
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.plans import plan_for
+from repro.core.scheduler import (ClusterSim, FunctionProfile, SchedulerConfig,
+                                  SimRequest, make_trace, summarize)
+from repro.hw import A6000_PCIE4 as HW
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    plan = plan_for("llama3-8b", 1, 1024)
+    mk = lambda name, dyn: FunctionProfile(
+        name=name, plan_for_len=lambda L: plan_for("llama3-8b", 1, L),
+        dynamic_bytes=int(plan.total_weight_bytes * 0.01) if dyn else 0,
+        template_bytes=0, model_bytes=plan.total_weight_bytes)
+    return {"static": mk("static", False), "dyn": mk("dyn", True)}
+
+
+def _reqs(fn, times, ilen=1024):
+    return [SimRequest(fn, t, ilen, i) for i, t in enumerate(times)]
+
+
+def test_keep_alive_warm_hits(profiles):
+    cfg = SchedulerConfig(n_gpus=1, policy="tidal", keep_alive_s=10.0)
+    res = ClusterSim(cfg, profiles).run(_reqs("static", [0.0, 5.0, 30.0]))
+    kinds = [r.kind for r in res]
+    assert kinds[0] == "cold"
+    assert kinds[1] == "warm"            # within keep-alive
+    assert kinds[2] == "cold"            # expired
+    assert res[1].ttft_s < res[0].ttft_s
+
+
+def test_dynamic_needs_dk_for_keepalive(profiles):
+    reqs = _reqs("dyn", [0.0, 2.0])
+    cold = ClusterSim(SchedulerConfig(n_gpus=1, policy="tidal", dk=False,
+                                      keep_alive_s=10.0), profiles).run(reqs)
+    dk = ClusterSim(SchedulerConfig(n_gpus=1, policy="tidal", dk=True,
+                                    keep_alive_s=10.0), profiles).run(reqs)
+    assert cold[1].kind == "cold"
+    assert dk[1].kind == "fork"
+    assert dk[1].ttft_s < cold[1].ttft_s
+
+
+def test_early_reject(profiles):
+    cfg = SchedulerConfig(n_gpus=1, policy="tidal", timeout_s=3.0)
+    # flood one gpu: later requests queue past the timeout
+    res = ClusterSim(cfg, profiles).run(_reqs("static", [0.0] * 30))
+    assert any(r.rejected for r in res)
+    rejected = [r for r in res if r.rejected]
+    assert all(r.ttft_s == cfg.timeout_s for r in rejected)
+
+
+def test_locality_prefers_warm_gpu(profiles):
+    cfg = SchedulerConfig(n_gpus=4, policy="tidal", keep_alive_s=60.0)
+    sim = ClusterSim(cfg, profiles)
+    res = sim.run(_reqs("static", [0.0, 10.0, 20.0]))
+    assert [r.kind for r in res[1:]] == ["warm", "warm"]
+
+
+def test_tidal_beats_serverlessllm_p95(profiles):
+    trace = make_trace({"static": 0.08, "dyn": 0.08}, 400.0,
+                       {"static": "conv", "dyn": "mail"}, seed=3)
+    base = ClusterSim(SchedulerConfig(n_gpus=2, policy="serverlessllm",
+                                      keep_alive_s=2.0), profiles).run(trace)
+    tid = ClusterSim(SchedulerConfig(n_gpus=2, policy="tidal", dk=True,
+                                     keep_alive_s=2.0), profiles).run(trace)
+    sb, stt = summarize(base), summarize(tid)
+    assert stt["p95"] < sb["p95"]
+    assert stt["p50"] < sb["p50"]
+
+
+def test_elastic_scale_up_reduces_queueing(profiles):
+    reqs = _reqs("static", list(np.linspace(0, 2, 40)))
+    small = ClusterSim(SchedulerConfig(n_gpus=1, policy="tidal"),
+                       profiles).run(reqs)
+    elastic = ClusterSim(SchedulerConfig(
+        n_gpus=1, policy="tidal", capacity_events=((2.0, +3),)),
+        profiles).run(reqs)
+    assert (sum(r.queue_s for r in elastic) < sum(r.queue_s for r in small))
+
+
+def test_straggler_hedging(profiles):
+    reqs = _reqs("static", [0.0] * 6)
+    cfg = SchedulerConfig(n_gpus=3, policy="tidal", hedge_after=0.5)
+    res = ClusterSim(cfg, profiles).run(reqs)
+    assert any(r.hedged for r in res)
+    assert not any(r.rejected for r in res)
+
+
+def test_hbm_eviction(profiles):
+    """More warm instances than HBM -> LRU eviction instead of crash."""
+    plan = plan_for("llama3-8b", 1, 1024)
+    cfg = SchedulerConfig(n_gpus=1, policy="tidal",
+                          hbm_budget=plan.total_weight_bytes * 1.5,
+                          keep_alive_s=100.0)
+    fns = dict(profiles)
+    reqs = ([SimRequest("static", 0.0, 512, 0),
+             SimRequest("dyn", 5.0, 512, 1),
+             SimRequest("static", 10.0, 512, 2)])
+    res = ClusterSim(cfg, fns).run(reqs)
+    assert len(res) == 3                     # all served
+
+
+def test_trace_generation_rates():
+    trace = make_trace({"a": 1.0, "b": 0.1}, 1000.0,
+                       {"a": "mail", "b": "code"}, seed=0)
+    na = sum(r.fn_name == "a" for r in trace)
+    nb = sum(r.fn_name == "b" for r in trace)
+    assert 800 < na < 1200
+    assert 60 < nb < 140
+    assert all(t0.arrival_s <= t1.arrival_s
+               for t0, t1 in zip(trace, trace[1:]))

@@ -1,0 +1,101 @@
+"""Sharding plan solver: divisibility, EP placement, FSDP, cache rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models.registry import SHAPES, get_model, get_smoke_model
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in (no devices needed for the pure solver)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def devices(self):
+        return np.empty(tuple(self.shape.values()), dtype=object)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "qwen3-14b", "deepseek-v3-671b",
+                                  "xlstm-1.3b", "zamba2-2.7b",
+                                  "whisper-medium", "phi3.5-moe-42b-a6.6b"])
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+def test_param_specs_divisible(arch, mesh):
+    model = get_model(arch)
+    specs = shd.param_specs(model, mesh, fsdp=True)
+    shapes = model.init_params(abstract=True)
+    assert shd.validate_specs(specs, shapes, mesh) == []
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "deepseek-v3-671b",
+                                  "zamba2-2.7b", "whisper-medium"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    model = get_model(arch)
+    if shape_name == "long_500k" and model.cfg.attention_kind == "full":
+        pytest.skip("long_500k runs only for sub-quadratic archs")
+    sh = SHAPES[shape_name]
+    cache = model.make_cache(sh["batch"], sh["seq"], abstract=True,
+                             dtype=jnp.bfloat16)
+    specs = shd.cache_specs(model, cache, MESH1, sh["batch"])
+    assert shd.validate_specs(specs, cache, MESH1) == []
+
+
+def test_expert_axis_goes_to_model():
+    model = get_model("deepseek-v3-671b")
+    specs = shd.param_specs(model, MESH1, fsdp=False)
+    e = specs["blocks"]["moe"]["experts"]["w_gate"]   # [L, E, D, F]
+    assert e[1] == "model"
+
+
+def test_scan_axis_never_sharded():
+    for arch in ("qwen3-14b", "zamba2-2.7b", "whisper-medium"):
+        model = get_model(arch)
+        specs = shd.param_specs(model, MESH2, fsdp=True)
+        for p, spec in jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P)):
+            from repro.utils import path_str
+            if path_str(p).startswith(("blocks.", "mamba.", "mlstm.",
+                                       "slstm.", "enc_blocks.", "dec_blocks.")):
+                if len(spec) > 0:
+                    assert spec[0] is None, (path_str(p), spec)
+
+
+def test_fsdp_adds_data_axis_sharding():
+    model = get_model("qwen2.5-32b")
+    no = shd.param_specs(model, MESH1, fsdp=False)
+    yes = shd.param_specs(model, MESH1, fsdp=True)
+    w = "blocks", "mlp", "w_gate"
+    assert "data" not in [a for a in no["blocks"]["mlp"]["w_gate"] if a]
+    flat = [a for a in yes["blocks"]["mlp"]["w_gate"] if a is not None]
+    assert any("data" in (a if isinstance(a, tuple) else (a,)) for a in flat)
+
+
+def test_long500k_batch1_shards_seq_over_data():
+    model = get_model("zamba2-2.7b")
+    cache = model.make_cache(1, 524288, abstract=True, dtype=jnp.bfloat16)
+    specs = shd.cache_specs(model, cache, MESH1, 1)
+    kv = specs["attn_kv"]["k"]                 # [U, B=1, S, kv, hd]
+    assert kv[1] is None                        # batch 1 unshardable
+    assert kv[2] == ("data",) or kv[2] == "data"
+
+
+def test_batch_specs():
+    toks = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    s1 = shd.batch_specs(toks, MESH1)
+    assert s1["tokens"][0] == "data"
+    s2 = shd.batch_specs(toks, MESH2)
+    assert s2["tokens"][0] == ("pod", "data")
+    tiny = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+    s3 = shd.batch_specs(tiny, MESH1)
+    assert s3["tokens"] == P(None, None)

@@ -1,0 +1,134 @@
+"""Template generation, Eq. 1 sizing, merging plans — incl. property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel
+from repro.core.merging import MergedHostBuffer, plan_groups, validate_plan
+from repro.core.template import FunctionTemplate, generate_template
+from repro.core.tracing import AccessTrace
+from repro.hw import A6000_PCIE4, TPU_V5E
+
+
+def _mk_template(n=10, size=100, dynamic=()):
+    order = [(f"w{i}", ()) for i in range(n)]
+    sizes = {k: size for k in order}
+    tr = AccessTrace(order=order, kernels={("dot", ())},
+                     kernel_launches=n, n_params_seen=n)
+    t = generate_template("f", tr, sizes, {f"w{i}": ("load", "ckpt", f"w{i}")
+                                           for i in range(n)})
+    t.dynamic = set(dynamic)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1
+# ---------------------------------------------------------------------------
+
+def test_eq1_prefetch_bytes():
+    hw = A6000_PCIE4
+    # loading fully overlapped when TTFT * BW >= model size -> 0 prefetch
+    assert costmodel.prefetch_bytes(10 << 30, 1000.0, hw) == 0
+    # no time to overlap -> prefetch everything
+    assert costmodel.prefetch_bytes(10 << 30, 0.0, hw) == 10 << 30
+    # middle: exactly M - T*B
+    got = costmodel.prefetch_bytes(10 << 30, 0.1, hw)
+    assert got == (10 << 30) - int(0.1 * hw.host_to_device_bw)
+
+
+@given(m=st.integers(0, 1 << 40), t=st.floats(0, 100, allow_nan=False))
+@settings(max_examples=50, deadline=None)
+def test_eq1_properties(m, t):
+    got = costmodel.prefetch_bytes(m, t, TPU_V5E)
+    assert 0 <= got <= m                       # clamped to [0, M_model]
+    # monotone: more observed TTFT -> never more prefetch needed
+    assert costmodel.prefetch_bytes(m, t + 1.0, TPU_V5E) <= got
+
+
+def test_observe_ttft_adapts_residency():
+    t = _mk_template(n=10, size=1 << 28)       # 2.5 GiB total
+    t.observe_ttft(0.01, A6000_PCIE4)          # tiny TTFT -> large template
+    big = t.resident_bytes
+    t2 = _mk_template(n=10, size=1 << 28)
+    t2.observe_ttft(10.0, A6000_PCIE4)         # huge TTFT -> no prefetch
+    assert t2.resident_bytes == 0
+    assert big > 0
+    assert len(t.resident_set()) > 0
+
+
+def test_resident_set_is_access_order_prefix():
+    t = _mk_template(n=10, size=100)
+    t.resident_bytes = 350
+    rs = t.resident_set()
+    assert rs == {("w0", ()), ("w1", ()), ("w2", ())}
+
+
+def test_dynamic_weights_never_resident():
+    t = _mk_template(n=10, size=100, dynamic={"w0", "w1"})
+    t.resident_bytes = 250
+    rs = t.resident_set()
+    assert rs == {("w2", ()), ("w3", ())}
+    assert t.dynamic_bytes == 200
+
+
+def test_incremental_dynamic_exclusion():
+    t = _mk_template(n=4, size=10)
+    new = t.observe_init({"w0": ("load", "ckpt", "w0"),
+                          "w1": ("load", "OTHER", "w1"),
+                          "w2": ("load", "ckpt", "w2"),
+                          "w3": ("load", "ckpt", "w3")})
+    assert new == {"w1"}
+    # a second differing weight later is also caught; w1 not re-reported
+    new2 = t.observe_init({"w0": ("load", "ckpt", "w0"),
+                           "w1": ("load", "THIRD", "w1"),
+                           "w3": ("load", "X", "w3")})
+    assert new2 == {"w3"}
+    assert t.dynamic == {"w1", "w3"}
+
+
+# ---------------------------------------------------------------------------
+# merging (Table 3)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 400), max_groups=st.integers(1, 64),
+       seed=st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_merge_plan_invariants(n, max_groups, seed):
+    rng = np.random.default_rng(seed)
+    order = [(f"w{i}", ()) for i in range(n)]
+    sizes = {k: int(rng.integers(1, 10_000)) for k in order}
+    groups = plan_groups(order, sizes, max_groups=max_groups, threshold=0)
+    validate_plan(order, sizes, groups)
+    if n > max_groups:
+        assert len(groups) <= max_groups
+
+
+def test_merge_threshold_skips_small_models():
+    order = [(f"w{i}", ()) for i in range(10)]
+    sizes = {k: 100 for k in order}
+    groups = plan_groups(order, sizes, max_groups=4, threshold=64)
+    assert len(groups) == 10                    # below threshold: no merge
+
+
+def test_merged_host_buffer_roundtrip():
+    order = [("a", ()), ("b", ()), ("c", ())]
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    b = np.arange(6, dtype=np.int32).reshape(2, 3)
+    c = np.arange(8, dtype=np.float32).reshape(8)
+    sizes = {("a", ()): a.nbytes, ("b", ()): b.nbytes, ("c", ()): c.nbytes}
+    (g,) = plan_groups(order, sizes, max_groups=1, threshold=0)
+    buf = MergedHostBuffer(g)
+    for k, arr in zip(order, (a, b, c)):
+        buf.write(k, arr)
+    np.testing.assert_array_equal(buf.read(("a", ())), a)
+    np.testing.assert_array_equal(buf.read(("b", ())), b)
+    np.testing.assert_array_equal(buf.read(("c", ())), c)
+
+
+def test_paper_70b_merge_ratio():
+    """Llama2-70B: ~1200 tensors merged into ~300 groups (paper §6)."""
+    order = [(f"w{i}", ()) for i in range(1200)]
+    sizes = {k: 1 << 20 for k in order}
+    groups = plan_groups(order, sizes, max_groups=300, threshold=512)
+    assert len(groups) == 300

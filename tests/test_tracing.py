@@ -1,0 +1,127 @@
+"""Weight-centric tracing tests (TIDAL §4.1): access order, coverage,
+per-layer granularity, the tied-embedding pathology, kernel dedup."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tracing import (coverage, trace_weight_access, weight_sizes)
+from repro.models.registry import get_smoke_model
+from repro.utils import tree_bytes
+
+ARCHS = ["smollm-135m", "gemma-2b", "qwen2.5-32b", "phi3.5-moe-42b-a6.6b",
+         "deepseek-v3-671b", "xlstm-1.3b", "zamba2-2.7b", "whisper-medium"]
+
+
+def _trace(arch, B=2, S=16):
+    m = get_smoke_model(arch)
+    specs = m.init_params(abstract=True)
+    inputs = m.input_specs("prefill", B, S, dtype=jnp.float32)
+    cache = m.make_cache(B, S, abstract=True)
+    tr = trace_weight_access(lambda p, i, c: m.prefill(p, i, c),
+                             specs, inputs, cache)
+    return m, specs, tr
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_coverage(arch):
+    """Every parameter must appear in the traced order (a missed weight
+    would never be streamed -> wrong results)."""
+    m, specs, tr = _trace(arch)
+    _, missed = coverage(specs, tr)
+    assert not missed, missed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_traced_bytes_equal_param_bytes(arch):
+    """Access-ordered weights partition the params exactly (no double
+    counting, no gaps)."""
+    m, specs, tr = _trace(arch)
+    sizes = weight_sizes(specs, tr.order)
+    assert sum(sizes.values()) == tree_bytes(specs)
+    assert len(set(tr.order)) == len(tr.order)          # no duplicates
+
+
+def test_per_layer_granularity():
+    m, specs, tr = _trace("smollm-135m")
+    L = m.cfg.n_layers
+    wq_keys = [k for k in tr.order if k[0] == "blocks.attn.wq"]
+    assert wq_keys == [("blocks.attn.wq", (l,)) for l in range(L)]
+
+
+def test_layer_order_is_monotonic():
+    """Layer l's weights are always accessed before layer l+1's."""
+    m, specs, tr = _trace("qwen3-14b")
+    layer_first = {}
+    for pos, (path, idx) in enumerate(tr.order):
+        if idx and path.startswith("blocks."):
+            layer_first.setdefault(idx[0], pos)
+    layers = sorted(layer_first)
+    assert all(layer_first[a] < layer_first[b]
+               for a, b in zip(layers, layers[1:]))
+
+
+def test_tied_embedding_accessed_first():
+    """The paper's Fig. 20 insight: a tied embedding is initialized last
+    (with the head) but ACCESSED first — the traced order must put it
+    first, unlike initialization order."""
+    m, specs, tr = _trace("gemma-2b")
+    assert tr.order[0] == ("embed", ())
+    # and it is also the final head: no separate lm_head exists
+    assert not any(k[0] == "lm_head" for k in tr.order)
+
+
+def test_kernel_dedup_across_identical_blocks():
+    """Deduped kernel signatures must NOT grow with depth (identical blocks
+    share signatures), while launches DO grow — TIDAL's dedup premise."""
+    m4, _, tr4 = _trace("smollm-135m")
+    m8 = get_smoke_model("smollm-135m", n_layers=8)
+    specs = m8.init_params(abstract=True)
+    tr8 = trace_weight_access(
+        lambda p, i, c: m8.prefill(p, i, c), specs,
+        m8.input_specs("prefill", 2, 16, dtype=jnp.float32),
+        m8.make_cache(2, 16, abstract=True))
+    assert len(tr8.kernels) == len(tr4.kernels)
+    assert tr8.kernel_launches > tr4.kernel_launches
+
+
+def test_hybrid_interleave_order():
+    """zamba2: each unit = 6 mamba blocks then the shared attn; the shared
+    attn weights must first appear AFTER the first unit's mamba weights and
+    never again (deduped: one weight set)."""
+    m, specs, tr = _trace("zamba2-2.7b")
+    first_shared = next(i for i, k in enumerate(tr.order)
+                        if k[0].startswith("shared_attn."))
+    mamba_before = [k for k in tr.order[:first_shared]
+                    if k[0].startswith("mamba.")]
+    assert len(mamba_before) > 0
+    per_unit = m.cfg.attn_every
+    seen_layers = {k[1][0] for k in mamba_before if k[1]}
+    assert seen_layers == set(range(per_unit))
+    shared_keys = [k for k in tr.order if k[0].startswith("shared_attn.")]
+    assert len(shared_keys) == len({k[0] for k in shared_keys})  # once each
+
+
+def test_order_shape_independent():
+    m = get_smoke_model("smollm-135m")
+    specs = m.init_params(abstract=True)
+
+    def tr_at(S):
+        return trace_weight_access(
+            lambda p, i, c: m.prefill(p, i, c), specs,
+            m.input_specs("prefill", 1, S, dtype=jnp.float32),
+            m.make_cache(1, S, abstract=True)).order
+
+    assert tr_at(16) == tr_at(64)
+
+
+def test_decode_step_trace_also_covers_params():
+    m = get_smoke_model("qwen3-14b")
+    specs = m.init_params(abstract=True)
+    cache = m.make_cache(2, 32, abstract=True)
+    tr = trace_weight_access(
+        lambda p, c, i: m.decode_step(p, c, i, jnp.int32(5)), specs, cache,
+        m.input_specs("decode", 2, 32, dtype=jnp.float32))
+    _, missed = coverage(specs, tr)
+    assert not missed
