@@ -2,7 +2,14 @@
 without LoRA, vs PyTorch-pin / ServerlessLLM / Execution.
 
 Paper headline: Tidal-0G is 1.96x / 2.00x faster than PyTorch-pin /
-ServerlessLLM on average; 22%~84% slower than Execution."""
+ServerlessLLM on average; 22%~84% slower than Execution.
+
+``--measured`` appends wall-clock warm/fork/cold TTFTs from the LIVE
+serving runtime on a smoke-scale model (CPU), validating that the real
+runtime reproduces the cost model's service-class ordering
+(warm < fork < cold)."""
+
+import sys
 
 from benchmarks.common import PAPER_HW, emit, lora_bytes
 from repro.core import costmodel as cm
@@ -14,7 +21,21 @@ from repro.core.plans import plan_for
 ARCHS = ["gemma-2b", "llama3-8b", "llama2-13b", "qwen3-14b"]
 
 
-def main():
+def measured_rows():
+    """Live smoke-model measurements through the real FaaS runtime."""
+    from repro.runtime.faas import measure_smoke_service_times
+
+    mst = measure_smoke_service_times({"smollm-live": "lora"})
+    out = []
+    for kind in ("warm", "fork", "cold"):
+        t = mst.service_s("smollm-live", kind)
+        if t is not None:
+            out.append((f"smollm-live/measured-{kind}", round(t * 1e3, 1),
+                        "wall-clock"))
+    return out
+
+
+def main(measured: bool = False):
     rows = []
     speedups_pin, speedups_sllm = [], []
     for arch in ARCHS:
@@ -44,8 +65,10 @@ def main():
     rows.append(("avg_speedup_vs_serverlessllm",
                  round(sum(speedups_sllm) / len(speedups_sllm), 2),
                  "paper=2.00x"))
+    if measured:
+        rows += measured_rows()
     return emit(rows)
 
 
 if __name__ == "__main__":
-    main()
+    main(measured="--measured" in sys.argv)

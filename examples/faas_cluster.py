@@ -4,7 +4,15 @@ ServerlessLLM against the TIDAL variants, with keep-alive, early-reject,
 elastic scaling and straggler hedging.
 
     PYTHONPATH=src python examples/faas_cluster.py
+
+With ``--measured`` the sim additionally runs in MEASURED mode: a live
+smoke-scale FaaS runtime serves real requests through template forking +
+continuous batching, its wall-clock warm/fork/cold service times become
+the sim's latency oracle (analytic model as fallback) — the sim-vs-real
+loop the benchmarks alone cannot close.
 """
+
+import argparse
 
 import numpy as np
 
@@ -39,7 +47,40 @@ def build():
     return fns, rates, tasks
 
 
+def measured_mode():
+    """ClusterSim sourced from the REAL runtime (smoke scale, CPU-live)."""
+    from repro.runtime.faas import measure_smoke_service_times
+
+    mst = measure_smoke_service_times({"live-static": "static",
+                                       "live-lora": "lora"})
+    print("measured service times (wall-clock, live runtime):")
+    print(mst.summary())
+
+    fns = {}
+    for name, dyn in (("live-static", 0), ("live-lora", 1 << 20)):
+        plan = plan_for("smollm-135m", 1, 867)
+        fns[name] = FunctionProfile(
+            name=name,
+            plan_for_len=lambda L: plan_for("smollm-135m", 1, L),
+            dynamic_bytes=dyn, model_bytes=plan.total_weight_bytes)
+    trace = make_trace({"live-static": 1.0, "live-lora": 1.0},
+                       duration_s=60.0,
+                       fn_tasks={"live-static": "mail", "live-lora": "mail"},
+                       seed=3)
+    cfg = SchedulerConfig(n_gpus=2, policy="tidal", dk=True, keep_alive_s=5.0,
+                          hw=A6000_PCIE4, measured=mst)
+    s = summarize(ClusterSim(cfg, fns).run(trace))
+    print(f"measured-mode sim ({len(trace)} reqs): "
+          f"p50={s['p50']*1e3:.1f}ms p95={s['p95']*1e3:.1f}ms "
+          f"cold={s['cold']} warm={s['warm']} fork={s['fork']}")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", action="store_true",
+                    help="also run the sim against live-runtime "
+                         "measurements (smoke scale)")
+    args = ap.parse_args()
     fns, rates, tasks = build()
     trace = make_trace(rates, duration_s=900.0, fn_tasks=tasks, seed=11)
     print(f"trace: {len(trace)} requests over 15 min, 16 functions")
@@ -67,6 +108,10 @@ def main():
     show("tidal-dk elastic 8->12",
          SchedulerConfig(n_gpus=8, policy="tidal", dk=True, keep_alive_s=10.0,
                          capacity_events=((300.0, +4),), hw=A6000_PCIE4))
+
+    if args.measured:
+        print()
+        measured_mode()
 
 
 if __name__ == "__main__":

@@ -18,6 +18,10 @@ Large-scale runnability features beyond the paper:
 
 Latencies come from the analytical cost model (calibrated against the
 paper's testbed); the simulator itself is exact discrete-event bookkeeping.
+In MEASURED mode (``SchedulerConfig.measured``) the warm/fork/cold service
+times are instead sourced from wall-clock measurements of the real serving
+runtime (``repro.runtime.faas.measure_service_times``), with the analytic
+oracle as fallback for anything unmeasured — closing the sim-vs-real loop.
 """
 
 from __future__ import annotations
@@ -114,6 +118,10 @@ class SchedulerConfig:
     # locality: prefer the warm GPU unless waiting for it costs more than
     # this over the best idle GPU (bounds the queueing cost of affinity)
     locality_max_extra_wait_s: float = 2.0
+    # measured mode: any object with .service_s(fn_name, kind, input_len)
+    # -> Optional[float] (e.g. repro.runtime.faas.MeasuredServiceTimes);
+    # None falls through to the analytic oracle per lookup
+    measured: Optional[object] = None
 
 
 class _GPU:
@@ -170,6 +178,20 @@ class ClusterSim:
         return costmodel.ttft_tidal(
             plan, hw, template_bytes=plan.total_weight_bytes,
             dynamic_bytes=prof.dynamic_bytes, prewarmed=True).total
+
+    def _service(self, kind: str, prof: FunctionProfile,
+                 input_len: int) -> float:
+        """Service time for one request: measured if available, analytic
+        otherwise."""
+        if self.cfg.measured is not None:
+            t = self.cfg.measured.service_s(prof.name, kind, input_len)
+            if t is not None:
+                return float(t)
+        if kind == "warm":
+            return self._warm_ttft(prof, input_len)
+        if kind == "fork":
+            return self._fork_ttft(prof, input_len)
+        return self._cold_ttft(prof, input_len)
 
     # ---- scheduling -------------------------------------------------------
     def _apply_capacity(self, now: float) -> None:
@@ -233,14 +255,15 @@ class ClusterSim:
                        and gpu.warm[req.fn_name][0] > start)
             dynamic = prof.dynamic_bytes > 0
             if is_warm and (not dynamic):
-                service, kind = self._warm_ttft(prof, req.input_len), "warm"
+                kind = "warm"
             elif is_warm and dynamic and cfg.dk:
-                service, kind = self._fork_ttft(prof, req.input_len), "fork"
+                kind = "fork"
             else:
                 need = prof.model_bytes
                 if gpu.free_hbm(start) < need:
                     gpu.evict_lru(need, start)
-                service, kind = self._cold_ttft(prof, req.input_len), "cold"
+                kind = "cold"
+            service = self._service(kind, prof, req.input_len)
 
             end = start + service
             gpu.busy_until = end

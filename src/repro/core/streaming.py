@@ -82,6 +82,10 @@ class WeightStreamer:
         if ev is None:
             raise KeyError(f"{key} neither resident, dynamic nor streamed")
         ev.wait()
+        # a fetch failure sets every event so no consumer hangs: slices that
+        # landed before the failure stay servable, the rest raise
+        if key in self._arrays:
+            return self._arrays[key]
         if self._error is not None:
             raise self._error
         return self._arrays[key]

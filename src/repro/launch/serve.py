@@ -1,32 +1,30 @@
 """Serving driver: deploy LLM functions on the full TIDAL stack and serve
-a request stream end-to-end (live on CPU with reduced configs; the same
-code path serves full configs on a real TPU slice).
+a request stream end-to-end through the FaaS runtime (live on CPU with
+reduced configs; the same code path serves full configs on a real TPU
+slice).
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch smollm-135m --functions 3 --requests 12 --lora
 
-Pipeline per request: process-pool acquire (pre-warmed executables) ->
-adaptive fork from the template (static reuse / dynamic replay) ->
-layer-streamed prefill overlapped with weight arrival -> decode loop ->
-Eq.1 TTFT feedback into the template size.
+Per request the runtime picks the service class itself: ``cold`` (first
+invocation), ``fork`` (adaptive state forking from the template, prefill
+overlapped with weight streaming) or ``warm`` (a kept-alive continuous-
+batching engine — no forking at all).  Every TTFT feeds back into the
+template's Eq. 1 residency budget.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import collections
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api as tidal
-from repro.core.prewarm import ExecutableCache, ProcessPool, prewarm_function
-from repro.core.streaming import streamed_prefill, supports_streamed_prefill
-from repro.core.template_server import TemplateServer
 from repro.data.pipeline import make_prompts
 from repro.models.registry import get_smoke_model
-from repro.runtime.engine import sample_greedy
+from repro.runtime.faas import FaaSRuntime
 from repro.utils import fmt_bytes
 
 
@@ -37,6 +35,9 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots per engine (decode batch capacity)")
+    ap.add_argument("--keep-alive", type=float, default=60.0)
     ap.add_argument("--lora", action="store_true",
                     help="deploy dynamic (LoRA) function variants")
     ap.add_argument("--layers", type=int, default=6,
@@ -44,11 +45,11 @@ def main():
     args = ap.parse_args()
 
     model = get_smoke_model(args.arch, n_layers=args.layers)
-    srv = TemplateServer(trace_batch=1, trace_seq=args.prompt_len)
-    cache = ExecutableCache()
-    pool = ProcessPool(size=2, cache=cache)
+    rt = FaaSRuntime(n_slots=args.slots,
+                     max_len=args.prompt_len + args.max_new,
+                     keep_alive_s=args.keep_alive,
+                     trace_seq=args.prompt_len)
 
-    fn_keys = {}
     rng = np.random.default_rng(0)
     for i in range(args.functions):
         params = model.init_params(jax.random.PRNGKey(i))
@@ -56,60 +57,41 @@ def main():
         if args.lora:
             fn = tidal.lora_function(name, model, params,
                                      ["blocks.attn.wq"], n_adapters=3)
-            srv.register(fn, {"adapter": "adapter-0"})
+            rt.deploy(fn, {"adapter": "adapter-0"},
+                      prewarm_seq=args.prompt_len)
         else:
             fn = tidal.static_function(name, model, params)
-            srv.register(fn, {})
-        fn_keys[name] = prewarm_function(cache, model, name, batch=1,
-                                         seq=args.prompt_len,
-                                         max_len=args.prompt_len + args.max_new)
-    pool.prewarm_for_functions(fn_keys)
+            rt.deploy(fn, {}, prewarm_seq=args.prompt_len)
     print(f"deployed {args.functions} function(s); pre-warmed "
-          f"{cache.stats.misses} executables in {cache.stats.compile_s:.1f}s")
+          f"{rt.exe_cache.stats.misses} executables in "
+          f"{rt.exe_cache.stats.compile_s:.1f}s")
 
-    ttfts = []
+    ttfts, kinds = [], collections.Counter()
     for r in range(args.requests):
         name = f"fn-{rng.integers(args.functions)}"
         event = ({"adapter": f"adapter-{rng.integers(3)}"}
                  if args.lora else {})
-        worker = pool.acquire()
-        t0 = time.perf_counter()
-        session, stats = srv.fork(name, event)
-        prompts = make_prompts(model.cfg.vocab_size, 1, args.prompt_len,
-                               seed=100 + r)
-        kv = model.make_cache(1, args.prompt_len + args.max_new)
-        if supports_streamed_prefill(model):
-            logits, kv = streamed_prefill(
-                session, {"tokens": jnp.asarray(prompts)}, kv)
-        else:
-            logits, kv = model.prefill(session.params(),
-                                       {"tokens": jnp.asarray(prompts)}, kv)
-        tok = sample_greedy(logits)
-        ttft = time.perf_counter() - t0
-        params = session.params()
-        out = [int(tok[0])]
-        for i in range(1, args.max_new):
-            logits, kv = model.decode_step(
-                params, kv, {"tokens": tok[:, None]},
-                jnp.int32(args.prompt_len + i - 1))
-            tok = sample_greedy(logits)
-            out.append(int(tok[0]))
-        total = time.perf_counter() - t0
-        srv.observe_ttft(name, ttft)
-        if worker is not None:
-            pool.release(worker)
-        ttfts.append(ttft)
-        print(f"req{r:02d} {name} {'(' + event.get('adapter', '') + ')' if args.lora else '':14s}"
-              f" ttft={ttft*1e3:7.1f}ms total={total*1e3:7.1f}ms "
-              f"reused={fmt_bytes(stats.reused_bytes):>10} "
-              f"streamed={fmt_bytes(stats.streamed_bytes):>10} "
-              f"dyn={fmt_bytes(stats.dynamic_bytes):>9} tokens={out[:4]}...")
+        prompt = make_prompts(model.cfg.vocab_size, 1, args.prompt_len,
+                              seed=100 + r)[0]
+        res = rt.submit(name, event, prompt, max_new_tokens=args.max_new)
+        ttfts.append(res.ttft_s)
+        kinds[res.kind] += 1
+        fs = res.fork_stats
+        detail = (f"reused={fmt_bytes(fs.reused_bytes):>10} "
+                  f"streamed={fmt_bytes(fs.streamed_bytes):>10} "
+                  f"dyn={fmt_bytes(fs.dynamic_bytes):>9}"
+                  if fs is not None else " " * 43)
+        print(f"req{r:02d} {name} "
+              f"{'(' + event.get('adapter', '') + ')' if args.lora else '':14s}"
+              f" {res.kind:4s} ttft={res.ttft_s*1e3:7.1f}ms "
+              f"e2e={res.e2e_s*1e3:7.1f}ms {detail} "
+              f"tokens={[int(t) for t in res.tokens[:4]]}...")
 
     print(f"\np50 ttft {np.percentile(ttfts, 50)*1e3:.1f}ms  "
           f"p95 {np.percentile(ttfts, 95)*1e3:.1f}ms  "
-          f"(first request pays template registration warmup; later forks "
-          f"reuse resident prefixes as Eq.1 adapts: "
-          f"{[fmt_bytes(t.resident_bytes) for t in srv.templates.values()]})")
+          f"kinds={dict(kinds)}  "
+          f"(Eq.1-adapted residency: "
+          f"{[fmt_bytes(t.resident_bytes) for t in rt.server.templates.values()]})")
 
 
 if __name__ == "__main__":

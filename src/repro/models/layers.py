@@ -148,14 +148,17 @@ def attention_block(
     cfg: ModelConfig,
     positions: jax.Array,               # [B, S]
     kv_cache: Optional[dict] = None,    # {'k','v': [B, T, KV, hd]} or None
-    cache_pos: Optional[jax.Array] = None,  # scalar: write offset into cache
+    cache_pos: Optional[jax.Array] = None,  # scalar or [B]: write offset(s)
     causal: bool = True,
 ):
     """GQA/MQA attention with optional KV cache.
 
     Returns (y, new_kv_cache).  With a cache, K/V for the current x are
     written at ``cache_pos`` and attention spans the whole cache up to
-    ``cache_pos + S``.
+    ``cache_pos + S``.  A vector ``cache_pos`` of shape [B] writes each
+    sequence's K/V at its own offset (continuous batching: slots in one
+    decode batch sit at different positions); vector offsets are
+    decode-only (S == 1).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -184,11 +187,17 @@ def attention_block(
 
     if kv_cache is not None:
         ck, cv = kv_cache["k"], kv_cache["v"]
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        if jnp.ndim(cache_pos) == 0:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        else:
+            assert S == 1, "per-sequence cache_pos is decode-only"
+            b = jnp.arange(B)
+            ck = ck.at[b, cache_pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[b, cache_pos].set(v[:, 0].astype(cv.dtype))
         T = ck.shape[1]
         new_cache = {"k": ck, "v": cv}
-        if cfg.attn_impl == "pallas" and S == 1:
+        if cfg.attn_impl == "pallas" and S == 1 and jnp.ndim(cache_pos) == 0:
             # decode: flash-decoding kernel over the cache
             from repro.kernels import ops as kops
             out = kops.decode_attention(

@@ -59,10 +59,18 @@ def mla_attention_block(
     k_rope = rope(kv[..., kvr:][..., None, :], positions, cfg.rope_theta)[..., 0, :]
 
     if kv_cache is not None:
-        cc = jax.lax.dynamic_update_slice(
-            kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype), (0, cache_pos, 0))
-        cr = jax.lax.dynamic_update_slice(
-            kv_cache["k_rope"], k_rope.astype(kv_cache["k_rope"].dtype), (0, cache_pos, 0))
+        if jnp.ndim(cache_pos) == 0:
+            cc = jax.lax.dynamic_update_slice(
+                kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype), (0, cache_pos, 0))
+            cr = jax.lax.dynamic_update_slice(
+                kv_cache["k_rope"], k_rope.astype(kv_cache["k_rope"].dtype), (0, cache_pos, 0))
+        else:
+            assert S == 1, "per-sequence cache_pos is decode-only"
+            b = jnp.arange(B)
+            cc = kv_cache["c_kv"].at[b, cache_pos].set(
+                c_kv[:, 0].astype(kv_cache["c_kv"].dtype))
+            cr = kv_cache["k_rope"].at[b, cache_pos].set(
+                k_rope[:, 0].astype(kv_cache["k_rope"].dtype))
         new_cache = {"c_kv": cc, "k_rope": cr}
         lat, kr = cc, cr
         T = lat.shape[1]

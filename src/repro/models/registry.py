@@ -84,12 +84,33 @@ class Model:
         return transformer.prefill(params, self.cfg, inputs["tokens"], cache)
 
     def decode_step(self, params, cache, inputs: dict, pos):
+        """One decode step.  ``pos`` is a scalar (whole batch at one
+        position) or, for decoder-only families, an int32 vector [B] of
+        per-sequence positions (continuous batching over cache slots)."""
         pos = jnp.asarray(pos, jnp.int32)
         if self.is_encdec:
             return encdec.decode_step(params, self.cfg, cache,
                                       inputs["tokens"], pos)
         return transformer.decode_step(params, self.cfg, cache,
                                        inputs["tokens"], pos)
+
+    # ---- cache slot pooling (continuous batching) -----------------------
+    # Every cache leaf across all families lays batch out on axis 1 (axis 0
+    # is the stacked layer/unit count), so slot-indexed gather/scatter over
+    # one shared pool cache is uniform: a pool leaf is [L, n_slots, ...] and
+    # a per-request sub-cache is [L, len(slots), ...].
+    CACHE_BATCH_AXIS = 1
+
+    def gather_cache_slots(self, pool_cache, slots):
+        """Extract the sub-cache of ``slots`` (int sequence) from a pool."""
+        idx = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(lambda t: jnp.take(t, idx, axis=1), pool_cache)
+
+    def scatter_cache_slots(self, pool_cache, slots, sub_cache):
+        """Write a sub-cache (batch == len(slots)) back into pool slots."""
+        idx = jnp.asarray(slots, jnp.int32)
+        return jax.tree.map(lambda pool, sub: pool.at[:, idx].set(
+            sub.astype(pool.dtype)), pool_cache, sub_cache)
 
     # ---- shape stand-ins for the dry-run ---------------------------------
     def input_specs(self, mode: str, batch: int, seq: int,

@@ -395,10 +395,15 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Cache):
 
 def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
                 tokens: jax.Array, pos: jax.Array):
-    """One decode step.  tokens: [B, 1]; pos: scalar int32 (next position)."""
+    """One decode step.  tokens: [B, 1]; pos: scalar int32 (next position)
+    or an int32 vector [B] of per-sequence positions (continuous batching:
+    every slot decodes at its own offset in one call)."""
     B = tokens.shape[0]
     x = embed_tokens(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
-    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    if jnp.ndim(pos) == 0:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    else:
+        positions = pos[:, None].astype(jnp.int32)
     x, new_cache, _ = _backbone(params, cfg, x, positions, cache, pos,
                                 training=False)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)

@@ -1,0 +1,22 @@
+"""Serving runtime subsystem.
+
+  engine      — sequential fixed-batch generation (the reference path)
+  kv_pool     — slot-indexed KV/state cache shared by one decode batch
+  continuous  — continuous-batching engine (admission queue + step loop)
+  faas        — FaaSRuntime front-end over TemplateServer + prewarm +
+                continuous batching, plus measured service-time oracles
+                for the cluster scheduler
+"""
+
+from repro.runtime.continuous import (ContinuousBatchingEngine, Request,
+                                      RequestOutput)
+from repro.runtime.engine import Engine, GenerationResult, sample_greedy
+from repro.runtime.faas import (FaaSRuntime, MeasuredServiceTimes,
+                                SubmitResult, measure_service_times)
+from repro.runtime.kv_pool import KVCachePool
+
+__all__ = [
+    "ContinuousBatchingEngine", "Engine", "FaaSRuntime", "GenerationResult",
+    "KVCachePool", "MeasuredServiceTimes", "Request", "RequestOutput",
+    "SubmitResult", "measure_service_times", "sample_greedy",
+]

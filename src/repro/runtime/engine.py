@@ -1,6 +1,11 @@
-"""Serving engine: batched prefill + decode generation over the uniform
-model API.  This is the execution layer the TIDAL core hooks into (forked
-params, streamed weights, pre-compiled executables all enter through here).
+"""Sequential serving engine: one fixed-shape batch, prefill + decode to
+completion, over the uniform model API.
+
+This is the runtime subsystem's reference path: the continuous-batching
+engine (``repro.runtime.continuous``) must reproduce its greedy output
+bit-for-bit per request, and the FaaS front-end (``repro.runtime.faas``)
+serves everything through that engine.  ``Engine`` remains the simplest
+way to run one batch (training evals, parity tests, encoder-decoder).
 """
 
 from __future__ import annotations

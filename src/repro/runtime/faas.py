@@ -1,0 +1,349 @@
+"""FaaS front-end: one ``submit(fn_name, event, prompt)`` API over the full
+TIDAL stack.
+
+Composes the pieces the launch scripts used to glue together by hand:
+
+  * :class:`TemplateServer` — register/fork (static reuse, dynamic replay,
+    access-order streaming);
+  * :class:`ExecutableCache` / :class:`ProcessPool` — §5.1 proactive code
+    loading (AOT-compiled serve entry points in pre-warmed workers);
+  * :class:`ContinuousBatchingEngine` — the execution layer; one warm engine
+    per (function, dynamic-config) is kept alive so subsequent invocations
+    skip forking entirely.
+
+Invocation kinds mirror the cluster scheduler's service classes:
+
+  * ``warm`` — a live engine existed: service = prefill + decode only;
+  * ``fork`` — template existed, new engine forked (streamed prefill
+    overlaps the weight transfers);
+  * ``cold`` — first invocation of the function since deploy (pays any
+    lazy compilation not covered by pre-warming, then forks).
+
+:func:`measure_service_times` turns those wall-clock measurements into a
+:class:`MeasuredServiceTimes` oracle the cluster scheduler can consume via
+``SchedulerConfig.measured`` — closing the sim-vs-real loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api as tidal
+from repro.core.api import LLMFunction
+from repro.core.prewarm import ExecutableCache, ProcessPool
+from repro.core.streaming import ForkSession
+from repro.core.template_server import ForkStats, TemplateServer
+from repro.models.registry import get_smoke_model
+from repro.runtime.continuous import ContinuousBatchingEngine
+
+KINDS = ("warm", "fork", "cold")
+
+
+@dataclasses.dataclass
+class SubmitResult:
+    req_id: int
+    fn_name: str
+    kind: str                        # 'warm' | 'fork' | 'cold'
+    tokens: np.ndarray               # [n_generated] int32
+    ttft_s: float
+    e2e_s: float
+    streamed_prefill: bool = False
+    fork_stats: Optional[ForkStats] = None
+
+
+def _engine_key(fn_name: str, event: dict) -> tuple:
+    return (fn_name, tuple(sorted((event or {}).items())))
+
+
+@dataclasses.dataclass
+class _WarmEngine:
+    engine: ContinuousBatchingEngine
+    last_used_s: float
+
+
+class FaaSRuntime:
+    """Serving runtime for deployed LLM functions."""
+
+    def __init__(self, server: Optional[TemplateServer] = None,
+                 n_slots: int = 4, max_len: int = 64,
+                 keep_alive_s: float = 60.0, max_warm_engines: int = 8,
+                 prewarm: bool = True, pool_workers: int = 2,
+                 trace_seq: int = 32):
+        self.server = server or TemplateServer(trace_batch=1,
+                                               trace_seq=trace_seq)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.keep_alive_s = keep_alive_s
+        self.max_warm_engines = max_warm_engines
+        self.prewarm = prewarm
+        self.exe_cache = ExecutableCache()
+        self.workers = ProcessPool(pool_workers, self.exe_cache)
+        self.functions: dict[str, LLMFunction] = {}
+        self._engines: dict[tuple, _WarmEngine] = {}
+        self._fn_keys: dict[str, list] = {}
+        self._invoked: set = set()
+        # jit'd serve entry points shared across every engine of a model:
+        # a fresh fork reuses the executables earlier engines compiled
+        # (the §5.1 dedup story at the engine level)
+        self._serve_fns: dict[int, tuple] = {}
+
+    def _serve_fns_for(self, fn_name: str) -> tuple:
+        model = self.functions[fn_name].model
+        key = id(model)
+        if key not in self._serve_fns:
+            prefill = jax.jit(
+                lambda p, i, c, m=model: m.prefill(p, i, c))
+            decode = jax.jit(
+                lambda p, c, t, pos, m=model: m.decode_step(
+                    p, c, {"tokens": t}, pos),
+                donate_argnums=(1,))
+            self._serve_fns[key] = (prefill, decode)
+        return self._serve_fns[key]
+
+    # ------------------------------------------------------------------
+    def deploy(self, fn: LLMFunction, example_event: Optional[dict] = None,
+               prewarm_seq: int = 32) -> None:
+        """Register the function's template and pre-warm its executables.
+
+        Pre-warming compiles the ENGINE's actual serve entry points (the
+        shared jit'd prefill at ``prewarm_seq`` and the pool-shaped decode)
+        so the first invocation pays forking, not lazy compilation — the
+        §5.1 policy.  Prompts of other lengths still compile lazily."""
+        self.functions[fn.name] = fn
+        self.server.register(fn, example_event or {})
+        if self.prewarm and not fn.model.is_encdec:
+            self._fn_keys[fn.name] = self._prewarm_engine_fns(fn,
+                                                              prewarm_seq)
+            self.workers.prewarm_for_functions(self._fn_keys)
+
+    def _prewarm_engine_fns(self, fn: LLMFunction, seq: int) -> list:
+        """Populate the jit caches of this model's shared serve fns by
+        running them once on zero-filled inputs, accounting the compiles
+        in the ExecutableCache (dedup'd across functions of one model)."""
+        model = fn.model
+        prefill_fn, decode_fn = self._serve_fns_for(fn.name)
+        kp = (id(model), "prefill", 1, seq, self.max_len)
+        kd = (id(model), "decode-pool", self.n_slots, self.max_len)
+
+        def warm_prefill():
+            params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  model.init_params(abstract=True))
+            inputs = {"tokens": jnp.zeros((1, seq), jnp.int32)}
+            jax.block_until_ready(
+                prefill_fn(params, inputs, model.make_cache(1, self.max_len)))
+            return prefill_fn
+
+        def warm_decode():
+            params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  model.init_params(abstract=True))
+            cache = model.make_cache(self.n_slots, self.max_len)
+            jax.block_until_ready(
+                decode_fn(params, cache,
+                          jnp.zeros((self.n_slots, 1), jnp.int32),
+                          jnp.zeros((self.n_slots,), jnp.int32)))
+            return decode_fn
+
+        self.exe_cache.get_or_compile(kp, warm_prefill)
+        self.exe_cache.get_or_compile(kd, warm_decode)
+        return [kp, kd]
+
+    # ------------------------------------------------------------------
+    def warm_engines(self) -> list:
+        return sorted(self._engines)
+
+    def evict(self, fn_name: Optional[str] = None) -> int:
+        """Drop warm engines (all of ``fn_name``'s, or every one).  The next
+        invocation takes the fork path again — i.e. keep-alive expiry."""
+        keys = [k for k in self._engines
+                if fn_name is None or k[0] == fn_name]
+        for k in keys:
+            del self._engines[k]
+        return len(keys)
+
+    def _prune(self, now: float) -> None:
+        for k in [k for k, w in self._engines.items()
+                  if now - w.last_used_s > self.keep_alive_s]:
+            del self._engines[k]
+        while len(self._engines) > self.max_warm_engines:
+            oldest = min(self._engines, key=lambda k: self._engines[k].last_used_s)
+            del self._engines[oldest]
+
+    # ------------------------------------------------------------------
+    def _engine_for(self, fn_name: str, event: Optional[dict],
+                    now: float) -> tuple:
+        """Resolve (key, engine, kind, fork_stats) for one invocation,
+        forking a new engine when no warm one exists."""
+        if fn_name not in self.functions:
+            raise KeyError(f"function {fn_name!r} is not deployed")
+        key = _engine_key(fn_name, event or {})
+        warm = self._engines.get(key)
+        if warm is not None:
+            self._invoked.add(fn_name)
+            return key, warm.engine, "warm", None
+        kind = "fork" if fn_name in self._invoked else "cold"
+        session, stats = self.server.fork(fn_name, event or {})
+        prefill_fn, decode_fn = self._serve_fns_for(fn_name)
+        engine = ContinuousBatchingEngine(
+            self.functions[fn_name].model, session,
+            n_slots=self.n_slots, max_len=self.max_len,
+            prefill_fn=prefill_fn, decode_fn=decode_fn)
+        self._engines[key] = _WarmEngine(engine, now)
+        self._invoked.add(fn_name)
+        return key, engine, kind, stats
+
+    def submit(self, fn_name: str, event: Optional[dict], prompt,
+               max_new_tokens: int = 8) -> SubmitResult:
+        """Invoke a deployed function on one prompt and drain the engine."""
+        return self.submit_many([(fn_name, event, prompt, max_new_tokens)])[0]
+
+    def submit_many(self, requests: list) -> list:
+        """Batch entry: ``requests`` is a list of (fn_name, event, prompt,
+        max_new_tokens) tuples.  All requests are enqueued BEFORE any engine
+        drains, so requests resolving to the same engine genuinely share
+        decode batches (continuous batching through the public API)."""
+        now = time.perf_counter()
+        self._prune(now)
+        # validate the whole batch BEFORE touching any engine: a bad member
+        # must not orphan earlier enqueues or misclassify first invocations
+        for fn_name, event, prompt, max_new_tokens in requests:
+            if fn_name not in self.functions:
+                raise KeyError(f"function {fn_name!r} is not deployed")
+            plen = len(np.asarray(prompt).reshape(-1))
+            if max_new_tokens < 1 or plen + max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"{fn_name}: prompt({plen}) + max_new({max_new_tokens}) "
+                    f"exceeds runtime max_len={self.max_len}")
+
+        worker = self.workers.acquire()                      # §5.1 pool
+        try:
+            pending = []                                     # enqueue phase
+            for fn_name, event, prompt, max_new_tokens in requests:
+                t_req = time.perf_counter()  # before fork: TTFT includes it
+                key, engine, kind, stats = self._engine_for(fn_name, event,
+                                                            now)
+                rid = engine.submit(prompt, max_new_tokens, submit_s=t_req)
+                pending.append((key, engine, rid, fn_name, kind, stats))
+
+            drained: dict = {}                               # drain phase
+            results = []
+            for key, engine, rid, fn_name, kind, stats in pending:
+                if id(engine) not in drained:
+                    drained[id(engine)] = engine.run()
+                    self._engines[key].last_used_s = time.perf_counter()
+                out = drained[id(engine)].pop(rid)   # bound engine.results
+                self.server.observe_ttft(fn_name, out.ttft_s)  # Eq. 1
+                results.append(SubmitResult(
+                    req_id=rid, fn_name=fn_name, kind=kind,
+                    tokens=out.tokens, ttft_s=out.ttft_s, e2e_s=out.e2e_s,
+                    streamed_prefill=out.streamed_prefill, fork_stats=stats))
+            return results
+        finally:
+            if worker is not None:
+                self.workers.release(worker)
+
+
+# ---------------------------------------------------------------------------
+# measured service times -> cluster-scheduler oracle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MeasuredServiceTimes:
+    """Wall-clock warm/fork/cold service times per function.
+
+    Satisfies the duck-typed ``SchedulerConfig.measured`` hook: the sim
+    calls ``service_s(fn_name, kind, input_len)`` and falls back to the
+    analytic cost model whenever this returns None.  ``"*"`` is a wildcard
+    function entry.
+
+    This implementation is deliberately FLAT in input length: every request
+    of a measured function gets the time observed at ``measured_prompt_len``
+    regardless of ``input_len`` (the parameter stays in the protocol so a
+    length-bucketed oracle can drop in).  Good for validating the sim's
+    service-class mix and ordering against reality; not a length-dependence
+    model."""
+    times: dict                              # fn_name -> {kind: seconds}
+    measured_prompt_len: Optional[int] = None
+
+    def service_s(self, fn_name: str, kind: str,
+                  input_len: Optional[int] = None) -> Optional[float]:
+        del input_len                        # flat: see class docstring
+        d = self.times.get(fn_name) or self.times.get("*")
+        if d is None:
+            return None
+        return d.get(kind)
+
+    def summary(self) -> str:
+        rows = []
+        for fn, d in sorted(self.times.items()):
+            rows.append(fn + ": " + " ".join(
+                f"{k}={d[k]*1e3:.1f}ms" for k in KINDS if k in d))
+        return "\n".join(rows)
+
+
+def measure_service_times(runtime: FaaSRuntime, fn_events: dict,
+                          prompt_len: int = 16, max_new_tokens: int = 4,
+                          warm_reps: int = 2,
+                          seed: int = 0) -> MeasuredServiceTimes:
+    """Exercise each function's cold, fork and warm paths on the REAL
+    runtime and record wall-clock service times.
+
+    ``fn_events``: {fn_name: event dict}.  Functions already invoked on this
+    runtime report their first measurement under the kind the runtime
+    actually took (fork), not cold.  The warm figure is the best of
+    ``warm_reps`` repeats: the first warm hit on a fresh engine may still
+    pay one-off lazy compilation, which is a compile artifact, not the
+    steady-state warm service time the scheduler models."""
+    rng = np.random.default_rng(seed)
+    times: dict = {}
+    for fn_name, event in fn_events.items():
+        vocab = runtime.functions[fn_name].model.cfg.vocab_size
+        prompt = rng.integers(0, vocab, prompt_len).astype(np.int32)
+        per: dict = {}
+        first = runtime.submit(fn_name, event, prompt, max_new_tokens)
+        per[first.kind] = first.ttft_s                      # cold (or fork)
+        runtime.evict(fn_name)                              # expire keep-alive
+        forked = runtime.submit(fn_name, event, prompt, max_new_tokens)
+        per.setdefault(forked.kind, forked.ttft_s)          # fork
+        for _ in range(max(1, warm_reps)):
+            warm = runtime.submit(fn_name, event, prompt, max_new_tokens)
+            prev = per.get(warm.kind)
+            per[warm.kind] = (warm.ttft_s if prev is None
+                              else min(prev, warm.ttft_s))
+        times[fn_name] = per
+    return MeasuredServiceTimes(times, measured_prompt_len=prompt_len)
+
+
+def measure_smoke_service_times(functions: dict, arch: str = "smollm-135m",
+                                n_layers: int = 2, n_slots: int = 2,
+                                max_len: int = 32, trace_seq: int = 16,
+                                prompt_len: int = 16, max_new_tokens: int = 4,
+                                seed: int = 0) -> MeasuredServiceTimes:
+    """One-stop live measurement rig shared by the ``--measured`` demos
+    (``benchmarks/fig13_ttft.py``, ``examples/faas_cluster.py``): build a
+    smoke-scale runtime on CPU, deploy one variant per ``functions`` entry
+    ({name: 'static' | 'lora'}), and measure cold/fork/warm wall-clock
+    service times for each."""
+    model = get_smoke_model(arch, n_layers=n_layers)
+    rt = FaaSRuntime(n_slots=n_slots, max_len=max_len, trace_seq=trace_seq)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    events: dict = {}
+    for name, kind in functions.items():
+        if kind == "lora":
+            rt.deploy(tidal.lora_function(name, model, params,
+                                          ["blocks.attn.wq"], n_adapters=2),
+                      {"adapter": "adapter-0"}, prewarm_seq=prompt_len)
+            events[name] = {"adapter": "adapter-1"}
+        elif kind == "static":
+            rt.deploy(tidal.static_function(name, model, params), {},
+                      prewarm_seq=prompt_len)
+            events[name] = {}
+        else:
+            raise ValueError(f"{name}: unknown function kind {kind!r}")
+    return measure_service_times(rt, events, prompt_len=prompt_len,
+                                 max_new_tokens=max_new_tokens)

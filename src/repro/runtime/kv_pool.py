@@ -1,0 +1,60 @@
+"""Fixed-capacity KV-cache slot pool: one cache, many invocations.
+
+The serving runtime decodes every active invocation in ONE batched
+``decode_step`` per iteration (continuous batching).  The pool owns a single
+cache pytree laid out exactly as ``model.make_cache(n_slots, max_len)`` —
+the batch axis doubles as the slot axis — so admission is a scatter of a
+request's batch-1 prefilled cache into a free slot and retirement just
+returns the slot index to the free list.  Gather/scatter go through the
+uniform ``Model.gather_cache_slots`` / ``Model.scatter_cache_slots`` API
+(batch lives on axis 1 of every cache leaf across model families).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.models.registry import Model
+
+
+class KVCachePool:
+    """Slot-indexed KV/state cache shared by one decode batch."""
+
+    def __init__(self, model: Model, n_slots: int, max_len: int):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.make_cache(n_slots, max_len)
+        self._free = list(range(n_slots - 1, -1, -1))
+
+    # ---- slot bookkeeping -------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KVCachePool exhausted: no free slots")
+        return self._free.pop()
+
+    def release(self, slot: int) -> None:
+        if slot in self._free or not (0 <= slot < self.n_slots):
+            raise ValueError(f"bad slot release: {slot}")
+        self._free.append(slot)
+
+    # ---- cache movement ---------------------------------------------------
+    def write_slot(self, slot: int, sub_cache: Any) -> None:
+        """Scatter a batch-1 cache (same ``max_len`` layout) into ``slot``."""
+        self.cache = self.model.scatter_cache_slots(self.cache, [slot],
+                                                    sub_cache)
+
+    def read_slot(self, slot: int) -> Any:
+        """Gather ``slot`` back out as a batch-1 cache."""
+        return self.model.gather_cache_slots(self.cache, [slot])
+
+    def nbytes(self) -> int:
+        return sum(int(l.nbytes) for l in jax.tree.leaves(self.cache))

@@ -1,0 +1,79 @@
+"""Fallback for the optional ``hypothesis`` dependency.
+
+The property tests use a small hypothesis surface: ``@given`` with keyword
+strategies (``integers`` / ``floats`` / ``sampled_from``) and ``@settings``.
+When hypothesis is installed (the ``dev`` extra) it is used unchanged; when
+it is missing, a deterministic sampler stands in so the seed suite still
+collects and the properties still run over boundary values plus a fixed
+pseudo-random sweep — weaker than real shrinking/search, but the invariants
+are exercised end-to-end either way.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, sample, edges=()):
+            self.sample = sample            # (rng) -> value
+            self.edges = list(edges)        # boundary values drawn first
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                edges=[min_value, max_value])
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                edges=[float(min_value), float(max_value)])
+
+        @staticmethod
+        def sampled_from(elements):
+            xs = list(elements)
+            return _Strategy(lambda rng: xs[int(rng.integers(len(xs)))],
+                             edges=xs[:2])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_kwargs):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies_kw):
+        def deco(fn):
+            n = getattr(fn, "_compat_max_examples", 20)
+
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                names = list(strategies_kw)
+                draws = []
+                for i in range(max(len(s.edges)
+                                   for s in strategies_kw.values())):
+                    draws.append({k: s.edges[min(i, len(s.edges) - 1)]
+                                  for k, s in strategies_kw.items()})
+                rng = np.random.default_rng(0)
+                while len(draws) < n:
+                    draws.append({k: s.sample(rng)
+                                  for k, s in strategies_kw.items()})
+                for drawn in draws[:max(n, len(draws))]:
+                    fn(*args, **{**kwargs, **drawn})
+
+            # hide the drawn params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            run.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies_kw])
+            return run
+        return deco

@@ -1,0 +1,336 @@
+"""Continuous-batching serving runtime: pool correctness, token parity with
+the sequential Engine, ForkSession admission mid-stream, the FaaS front-end
+service classes, and the scheduler's measured mode."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api as tidal
+from repro.core.scheduler import (ClusterSim, FunctionProfile,
+                                  SchedulerConfig, make_trace, summarize)
+from repro.core.streaming import ForkSession, StreamEntry, WeightStreamer
+from repro.core.template_server import TemplateServer
+from repro.models.registry import get_smoke_model
+from repro.runtime.continuous import ContinuousBatchingEngine
+from repro.runtime.engine import Engine
+from repro.runtime.faas import FaaSRuntime, measure_service_times
+from repro.runtime.kv_pool import KVCachePool
+from repro.utils import path_str
+
+MAX_LEN = 24
+
+
+def _mixed_requests(vocab, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, vocab, s).astype(np.int32), n)
+            for s, n in [(4, 5), (9, 3), (6, 7), (11, 4), (5, 6)]]
+
+
+def _sequential_tokens(m, params, reqs):
+    eng = Engine(m, params, donate_cache=False)
+    return [eng.generate(p[None], max_new_tokens=n,
+                         cache_len=MAX_LEN).tokens[0] for p, n in reqs]
+
+
+# ---------------------------------------------------------------------------
+# KVCachePool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "deepseek-v3-671b",
+                                  "zamba2-2.7b"])
+def test_kv_pool_scatter_gather_roundtrip(arch):
+    m = get_smoke_model(arch)
+    pool = KVCachePool(m, n_slots=3, max_len=8)
+    subs = []
+    for slot in range(3):
+        sub = jax.tree.map(
+            lambda t: jnp.full(t.shape, slot + 1, t.dtype),
+            m.make_cache(1, 8))
+        subs.append(sub)
+        pool.write_slot(slot, sub)
+    for slot in (2, 0, 1):
+        got = pool.read_slot(slot)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(subs[slot])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kv_pool_slot_accounting():
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    pool = KVCachePool(m, n_slots=2, max_len=4)
+    a, b = pool.alloc(), pool.alloc()
+    assert pool.n_free == 0
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+    pool.release(a)
+    assert pool.n_free == 1
+    with pytest.raises(ValueError):
+        pool.release(a)                      # double free
+    assert pool.alloc() == a
+
+
+# ---------------------------------------------------------------------------
+# ContinuousBatchingEngine vs sequential Engine
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_sequential_mixed_lengths():
+    """Bit-identical greedy tokens for a mixed-length request set, with
+    fewer slots than requests (slot reuse + mid-decode admission)."""
+    m = get_smoke_model("smollm-135m", n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(m.cfg.vocab_size)
+    want = _sequential_tokens(m, params, reqs)
+
+    cbe = ContinuousBatchingEngine(m, params, n_slots=2, max_len=MAX_LEN)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, (p, n), w in zip(rids, reqs, want):
+        assert out[rid].n_generated == n
+        assert out[rid].prompt_len == len(p)
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "zamba2-2.7b",
+                                  "xlstm-1.3b"])
+def test_continuous_matches_sequential_other_families(arch):
+    m = get_smoke_model(arch)
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=1)[:3]
+    want = _sequential_tokens(m, params, reqs)
+    cbe = ContinuousBatchingEngine(m, params, n_slots=2, max_len=MAX_LEN)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+def test_continuous_rejects_oversized_and_encdec():
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    cbe = ContinuousBatchingEngine(m, m.init_params(jax.random.PRNGKey(0)),
+                                   n_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        cbe.submit(np.zeros(6, np.int32), max_new_tokens=4)   # 6+4 > 8
+    enc = get_smoke_model("whisper-medium")
+    with pytest.raises(NotImplementedError):
+        ContinuousBatchingEngine(enc, None)
+
+
+def _slow_fork_session(m, params, delay_s=0.003):
+    """A ForkSession whose weights stream with an artificial per-leaf delay,
+    so admission reliably happens while later layers are still in flight."""
+    flat = {path_str(p): np.asarray(l)
+            for p, l in jax.tree_util.tree_leaves_with_path(params)}
+
+    def fetch(arr):
+        time.sleep(delay_s)
+        return arr
+
+    entries = [StreamEntry((path, ()), fetch=lambda a=arr: fetch(a))
+               for path, arr in flat.items()]
+    streamer = WeightStreamer(entries, {}, {}).start()
+    return ForkSession(m, streamer, {path: ("whole",) for path in flat})
+
+
+def test_admission_from_fork_session_mid_stream():
+    """A request admitted while the session's weights are still streaming
+    (layer-streamed prefill) must yield the same tokens as plain params —
+    and the rest of the mixed batch must stay bit-identical too."""
+    m = get_smoke_model("smollm-135m", n_layers=3)
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=7)
+    want = _sequential_tokens(m, params, reqs)
+
+    session = _slow_fork_session(m, params)
+    cbe = ContinuousBatchingEngine(m, session, n_slots=2, max_len=MAX_LEN)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    # first admission happened while the stream was in flight
+    assert out[rids[0]].streamed_prefill
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+def test_forked_session_from_template_server_parity():
+    """End-to-end: TemplateServer.fork -> continuous batching == Engine."""
+    m = get_smoke_model("smollm-135m", n_layers=3)
+    params = m.init_params(jax.random.PRNGKey(0))
+    srv = TemplateServer(trace_batch=1, trace_seq=8)
+    srv.register(tidal.static_function("f", m, params), {})
+    session, _ = srv.fork("f", {})
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=11)[:3]
+    want = _sequential_tokens(m, params, reqs)
+    cbe = ContinuousBatchingEngine(m, session, n_slots=2, max_len=MAX_LEN)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+# ---------------------------------------------------------------------------
+# FaaSRuntime + measured-mode scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def faas_runtime():
+    m = get_smoke_model("smollm-135m", n_layers=2)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt.deploy(tidal.static_function("fn-static", m, params), {},
+              prewarm_seq=8)
+    rt.deploy(tidal.lora_function("fn-lora", m, params,
+                                  ["blocks.attn.wq"], n_adapters=2),
+              {"adapter": "adapter-0"}, prewarm_seq=8)
+    return m, params, rt
+
+
+def test_faas_service_classes_and_parity(faas_runtime):
+    m, params, rt = faas_runtime
+    prompt = np.arange(10, dtype=np.int32) % m.cfg.vocab_size
+    want = Engine(m, params, donate_cache=False).generate(
+        prompt[None], max_new_tokens=4, cache_len=MAX_LEN).tokens[0]
+
+    r1 = rt.submit("fn-static", {}, prompt, 4)      # first invocation
+    r2 = rt.submit("fn-static", {}, prompt, 4)      # engine kept alive
+    rt.evict("fn-static")                           # keep-alive expiry
+    r3 = rt.submit("fn-static", {}, prompt, 4)      # re-fork
+    assert (r1.kind, r2.kind, r3.kind) == ("cold", "warm", "fork")
+    assert r1.fork_stats is not None and r2.fork_stats is None
+    for r in (r1, r2, r3):
+        np.testing.assert_array_equal(r.tokens, want)
+
+    with pytest.raises(KeyError):
+        rt.submit("nope", {}, prompt, 4)
+
+
+def test_faas_submit_many_shares_one_engine(faas_runtime):
+    """submit_many enqueues every request before any engine drains: same-
+    (fn, event) requests share one continuous-batching engine and decode
+    together, and each output stays bit-identical to a sequential run."""
+    m, params, rt = faas_runtime
+    rt.evict()
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=5)[:3]
+    want = _sequential_tokens(m, params, reqs)
+    results = rt.submit_many([("fn-static", {}, p, n) for p, n in reqs])
+    # one fork, then the batch-mates found the same engine already warm
+    assert results[0].kind in ("cold", "fork")
+    assert [r.kind for r in results[1:]] == ["warm", "warm"]
+    assert len([k for k in rt.warm_engines() if k[0] == "fn-static"]) == 1
+    for r, w in zip(results, want):
+        np.testing.assert_array_equal(r.tokens, w)
+
+
+def test_faas_submit_many_validates_before_enqueue(faas_runtime):
+    """A bad batch member fails the whole call BEFORE anything is enqueued
+    or forked: no orphaned requests, no misclassified invocations, and
+    collected results don't accumulate on warm engines."""
+    m, params, rt = faas_runtime
+    good = np.arange(6, dtype=np.int32)
+    too_long = np.arange(MAX_LEN, dtype=np.int32)
+    with pytest.raises(ValueError, match="exceeds runtime max_len"):
+        rt.submit_many([("fn-static", {}, good, 4),
+                        ("fn-static", {}, too_long, 4)])
+    with pytest.raises(KeyError):
+        rt.submit_many([("fn-static", {}, good, 4),
+                        ("not-deployed", {}, good, 4)])
+    r = rt.submit("fn-static", {}, good, 4)
+    assert r.tokens.shape == (4,)
+    for key in rt.warm_engines():
+        eng = rt._engines[key].engine
+        assert eng.n_pending == 0          # nothing orphaned in queues
+        assert not eng.results             # collected results are popped
+
+
+def test_faas_ttft_includes_fork_time(faas_runtime):
+    """Fork/cold TTFT must cover the synchronous fork, not just
+    prefill+decode — that is the number Eq. 1 and measured mode consume."""
+    m, params, rt = faas_runtime
+    prompt = np.arange(6, dtype=np.int32)
+    rt.evict("fn-static")
+    forked = rt.submit("fn-static", {}, prompt, 2)
+    warm = rt.submit("fn-static", {}, prompt, 2)
+    assert forked.kind == "fork" and warm.kind == "warm"
+    assert forked.fork_stats.fork_s > 0
+    assert forked.ttft_s > forked.fork_stats.fork_s
+
+
+def test_faas_deploy_prewarms_engine_entry_points(faas_runtime):
+    """deploy() pre-compiles the engine's serve entry points (shared per
+    model), so the executable cache holds exactly one prefill + one decode
+    signature for the shared smoke model."""
+    m, params, rt = faas_runtime
+    kinds = {k[1] for k in rt.exe_cache.keys()}
+    assert kinds == {"prefill", "decode-pool"}
+    assert rt.exe_cache.stats.misses == 2          # dedup'd across functions
+    assert rt.exe_cache.stats.hits >= 1            # 2nd deploy hit the cache
+
+
+def test_faas_lora_adapters_get_separate_engines(faas_runtime):
+    m, params, rt = faas_runtime
+    prompt = np.arange(8, dtype=np.int32) % m.cfg.vocab_size
+    a0 = rt.submit("fn-lora", {"adapter": "adapter-0"}, prompt, 4)
+    a1 = rt.submit("fn-lora", {"adapter": "adapter-1"}, prompt, 4)
+    again = rt.submit("fn-lora", {"adapter": "adapter-1"}, prompt, 4)
+    assert a1.kind in ("cold", "fork") and again.kind == "warm"
+    np.testing.assert_array_equal(a1.tokens, again.tokens)
+    # different adapters are different dynamic weights -> usually different
+    # engines; both decode greedily from the same base so shapes agree
+    assert a0.tokens.shape == a1.tokens.shape
+
+
+def test_cluster_sim_measured_mode():
+    """ClusterSim in measured mode: warm/fork/cold service times come from
+    the live runtime's wall clock, not the analytic oracle."""
+    from repro.core.plans import plan_for
+
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8)
+    params = m.init_params(jax.random.PRNGKey(1))
+    rt.deploy(tidal.lora_function("fn-live", m, params,
+                                  ["blocks.attn.wq"], n_adapters=2),
+              {"adapter": "adapter-0"}, prewarm_seq=8)
+    mst = measure_service_times(rt, {"fn-live": {"adapter": "adapter-1"}},
+                                prompt_len=8, max_new_tokens=2)
+    for kind in ("warm", "fork", "cold"):
+        assert mst.service_s("fn-live", kind) is not None
+    assert mst.service_s("fn-live", "warm") < mst.service_s("fn-live", "fork")
+
+    plan = plan_for("smollm-135m", 1, 867)
+    fns = {"fn-live": FunctionProfile(
+        name="fn-live",
+        plan_for_len=lambda L: plan_for("smollm-135m", 1, L),
+        dynamic_bytes=1 << 20, model_bytes=plan.total_weight_bytes)}
+    trace = make_trace({"fn-live": 2.0}, duration_s=10.0,
+                       fn_tasks={"fn-live": "mail"}, seed=0)
+    cfg = SchedulerConfig(n_gpus=2, policy="tidal", dk=True, keep_alive_s=5.0,
+                          measured=mst)
+    results = ClusterSim(cfg, fns).run(trace)
+    assert results
+    for r in results:
+        if not r.rejected:
+            assert r.service_s == pytest.approx(
+                mst.service_s("fn-live", r.kind))
+    s = summarize(results)
+    assert s["warm"] + s["fork"] + s["cold"] == s["n"] - s["rejected"]
+
+
+def test_cluster_sim_measured_falls_back_to_analytic():
+    """Functions absent from the measured table use the analytic oracle."""
+    from repro.core.plans import plan_for
+
+    class Empty:
+        def service_s(self, fn, kind, input_len=None):
+            return None
+
+    plan = plan_for("smollm-135m", 1, 867)
+    fns = {"f": FunctionProfile(
+        name="f", plan_for_len=lambda L: plan_for("smollm-135m", 1, L),
+        model_bytes=plan.total_weight_bytes)}
+    trace = make_trace({"f": 1.0}, duration_s=5.0, fn_tasks={"f": "mail"},
+                       seed=1)
+    base = ClusterSim(SchedulerConfig(n_gpus=1), fns).run(trace)
+    meas = ClusterSim(SchedulerConfig(n_gpus=1, measured=Empty()),
+                      fns).run(trace)
+    assert [r.service_s for r in base] == [r.service_s for r in meas]

@@ -1,5 +1,8 @@
 """Template server + adaptive forking + overlapped streaming (TIDAL §5.2)."""
 
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,10 +10,12 @@ import pytest
 
 from repro.core import api as tidal
 from repro.core.forking import DonationGuard, copy_for_write, safe_jit
-from repro.core.streaming import streamed_prefill, supports_streamed_prefill
+from repro.core.streaming import (ForkSession, StreamEntry, WeightStreamer,
+                                  streamed_prefill, supports_streamed_prefill)
 from repro.core.template_server import TemplateServer
 from repro.data.pipeline import make_prompts
 from repro.models.registry import get_smoke_model
+from repro.utils import path_str
 
 
 @pytest.fixture(scope="module")
@@ -125,6 +130,67 @@ def test_lora_merge_correctness():
     want = (np.asarray(params["final_norm"])
             + (A @ B).reshape(-1).astype(np.float32) * 2.0)
     np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_streamer_failure_surfaces_everywhere_no_hang():
+    """A fetch that raises must surface the error on every blocked get()
+    and on wait_all() — consumers must never hang.  Slices that landed
+    before the failure stay servable."""
+    def ok():
+        return np.ones(4, np.float32)
+
+    def boom():
+        time.sleep(0.02)
+        raise RuntimeError("host pool gone")
+
+    ws = WeightStreamer([StreamEntry(("a", ()), fetch=ok),
+                         StreamEntry(("b", ()), fetch=boom),
+                         StreamEntry(("c", ()), fetch=ok)], {}, {})
+
+    # a consumer already blocked on a post-failure key before start()
+    got = {}
+
+    def consumer():
+        try:
+            got["c"] = ws.get(("c", ()))
+        except BaseException as e:           # noqa: BLE001 — assert below
+            got["c"] = e
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    ws.start()
+    t.join(timeout=10.0)
+    assert not t.is_alive(), "blocked consumer hung after stream failure"
+    assert isinstance(got["c"], RuntimeError)
+
+    np.testing.assert_array_equal(
+        np.asarray(ws.get(("a", ()))), np.ones(4))   # completed before boom
+    with pytest.raises(RuntimeError, match="host pool gone"):
+        ws.get(("b", ()))
+    with pytest.raises(RuntimeError, match="host pool gone"):
+        ws.wait_all()
+
+
+def test_fork_session_params_surfaces_stream_error():
+    """ForkSession.params() gathers every leaf — a failed transfer must
+    propagate out of it, not deadlock the invocation."""
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    params = m.init_params(jax.random.PRNGKey(0))
+    flat = {path_str(p): np.asarray(l)
+            for p, l in jax.tree_util.tree_leaves_with_path(params)}
+
+    entries = []
+    for i, (path, arr) in enumerate(sorted(flat.items())):
+        if i == 1:
+            def bad():
+                raise IOError("checkpoint shard unreachable")
+            entries.append(StreamEntry((path, ()), fetch=bad))
+        else:
+            entries.append(StreamEntry((path, ()), fetch=lambda a=arr: a))
+    session = ForkSession(m, WeightStreamer(entries, {}, {}).start(),
+                          {path: ("whole",) for path in flat})
+    with pytest.raises(IOError, match="shard unreachable"):
+        session.params()
 
 
 def test_eq1_feedback_loop(smoke_setup):

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import costmodel
 from repro.core.merging import MergedHostBuffer, plan_groups, validate_plan
