@@ -9,11 +9,9 @@ smollm-135m validate mechanisms in tests/ and examples/.
 
 from __future__ import annotations
 
-import sys
 
 from repro.core import costmodel as cm
-from repro.core.plans import plan_for
-from repro.hw import A6000_PCIE4, A100_PCIE3, TPU_V5E
+from repro.hw import A6000_PCIE4
 
 PAPER_HW = A6000_PCIE4
 LORA_FRACTION = 0.01          # adapters < 1% of the base model (paper §2.3)

@@ -1,14 +1,82 @@
 """Fig. 14: TTFT vs template size (0G -> whole model), llama family +
 LoRA variants.  Paper: Tidal-Warm is 14%~48% faster than Tidal-0G; dynamic
 functions need SMALLER templates to reach best TTFT (their adapter init
-overlaps more loading)."""
+overlaps more loading).
+
+``--paged`` appends a LIVE paged-vs-dense resident-state comparison on a
+smoke-scale model (CPU): the same mixed-length workload served at the same
+concurrency through the dense slot pool and the block-paged pool, reporting
+resident KV bytes, the max concurrency each layout affords at the dense
+pool's HBM budget, and greedy token parity between the two paths."""
+
+import sys
 
 from benchmarks.common import PAPER_HW, emit, lora_bytes
 from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 
 
-def main():
+def paged_rows(arch: str = "llama3-8b", n_layers: int = 2,
+               n_slots: int = 4, max_len: int = 64, page_size: int = 8):
+    """Serve one mixed-length batch through both pool layouts and compare
+    footprints at equal concurrency (and concurrency at equal footprint)."""
+    import jax
+    import numpy as np
+
+    from repro.models.registry import get_smoke_model
+    from repro.runtime.continuous import ContinuousBatchingEngine
+    from repro.runtime.kv_pool import KVCachePool
+
+    m = get_smoke_model(arch, n_layers=n_layers)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # mixed-length workload: short chats to near-max_len completions
+    reqs = [(rng.integers(0, m.cfg.vocab_size, s).astype(np.int32), n)
+            for s, n in [(6, 4), (40, 8), (12, 6), (50, 8)]]
+    blocks = sum(-(-(len(p) + n) // page_size) for p, n in reqs)
+    n_pages = 1 + blocks                     # sized to demand, + null page
+
+    dense_eng = ContinuousBatchingEngine(m, params, n_slots=n_slots,
+                                         max_len=max_len, paged=False)
+    paged_eng = ContinuousBatchingEngine(m, params, n_slots=n_slots,
+                                         max_len=max_len,
+                                         page_size=page_size,
+                                         n_pages=n_pages)
+    outs = []
+    for eng in (dense_eng, paged_eng):
+        rids = [eng.submit(p, n) for p, n in reqs]
+        res = eng.run()
+        outs.append([res[r].tokens for r in rids])
+    parity = all(np.array_equal(a, b) for a, b in zip(*outs))
+
+    dense_bytes = dense_eng.pool.nbytes()
+    paged_bytes = paged_eng.pool.nbytes()
+    assert isinstance(dense_eng.pool, KVCachePool)
+    # concurrency each layout affords inside the DENSE pool's HBM budget,
+    # for requests of this workload's mean footprint
+    page_bytes = paged_bytes / n_pages
+    mean_blocks = blocks / len(reqs)
+    conc_paged = int((dense_bytes // page_bytes - 1) // mean_blocks)
+    rows = [
+        ("paged/dense_resident_kv_bytes", dense_bytes,
+         f"slots={n_slots}x{max_len}tok"),
+        ("paged/paged_resident_kv_bytes", paged_bytes,
+         f"pages={n_pages}x{page_size}tok saving={dense_bytes/paged_bytes:.2f}x"),
+        ("paged/max_concurrency_equal_hbm_dense", n_slots,
+         f"budget={dense_bytes}B"),
+        ("paged/max_concurrency_equal_hbm_paged", conc_paged,
+         f"{conc_paged / n_slots:.1f}x_dense"),
+        ("paged/greedy_token_parity", "ok" if parity else "MISMATCH",
+         f"{len(reqs)}_mixed_len_requests"),
+    ]
+    if not parity:
+        raise SystemExit("paged/dense token mismatch")
+    if paged_bytes >= dense_bytes:
+        raise SystemExit("paged pool must be strictly smaller than dense")
+    return rows
+
+
+def main(paged: bool = False):
     rows = []
     for arch in ("llama3-8b", "llama2-13b"):
         plan = plan_for(arch, 1, 2048)
@@ -33,8 +101,10 @@ def main():
             rows.append((f"{tag}/saturation_point",
                          best_g if best_g is not None else "warm",
                          "GiB_to_reach_warm_ttft"))
-    return emit(rows)
+    if paged:
+        rows += paged_rows()
+    return emit(rows, header=("name", "value", "derived"))
 
 
 if __name__ == "__main__":
-    main()
+    main(paged="--paged" in sys.argv)

@@ -5,10 +5,8 @@ llama2-13b-lora) over Mail/Conv/Code/LongBench tasks at low/med/high rates.
 Paper headline: Tidal cuts the 95%-ile TTFT by 76.0% vs ServerlessLLM;
 variants Tidal < Tidal-DK < Tidal-DK-6G improve progressively."""
 
-import numpy as np
 
 from benchmarks.common import emit, lora_bytes
-from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 from repro.core.scheduler import (ClusterSim, FunctionProfile,
                                   SchedulerConfig, make_trace, summarize)

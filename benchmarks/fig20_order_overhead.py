@@ -10,7 +10,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import PAPER_HW, emit
 from repro.core import costmodel as cm

@@ -14,7 +14,6 @@ loop the benchmarks alone cannot close.
 
 import argparse
 
-import numpy as np
 
 from repro.core.plans import plan_for
 from repro.core.scheduler import (ClusterSim, FunctionProfile,

@@ -58,7 +58,6 @@ def main():
     print(f"TTFT (live CPU): {ttft*1e3:.1f} ms; first token id={int(tok[0,0])}")
 
     # 5. decode a few tokens with the prewarmed executable
-    dec = cache.compile_jit  # executables already cached by prewarm
     params_full = session.params()
     out = [int(tok[0, 0])]
     for pos in range(32, 40):

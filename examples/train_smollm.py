@@ -10,10 +10,9 @@ distribution story for the full config lives in the train_4k dry-run cell).
 
 import argparse
 
-import jax
 
 from repro.data.pipeline import DataConfig
-from repro.models.registry import get_config, get_model
+from repro.models.registry import get_config
 from repro.train.optimizer import OptimizerConfig
 from repro.train.train_loop import TrainLoopConfig, train
 from repro.models.registry import Model

@@ -22,12 +22,12 @@ buffers instead.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import numpy as np
 
-from repro.core.fingerprint import Checkpoint, TracedArray, tree_fingerprints
+from repro.core.fingerprint import Checkpoint, tree_fingerprints
 from repro.models.registry import Model
 from repro.utils import path_str
 

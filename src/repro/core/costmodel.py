@@ -26,7 +26,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
-import numpy as np
 
 from repro.hw import HardwareProfile
 from repro.models.config import ModelConfig

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import numpy as np
 

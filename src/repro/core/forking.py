@@ -21,7 +21,7 @@ need to mutate a forked weight (e.g. in-place quantization experiments).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable
+from typing import Iterable
 
 import jax
 import jax.numpy as jnp

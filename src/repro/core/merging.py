@@ -14,7 +14,7 @@ so a group transfers with a single ``device_put``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

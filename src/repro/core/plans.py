@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import costmodel
 from repro.core.tracing import trace_weight_access, weight_sizes
-from repro.models.registry import Model, get_model
+from repro.models.registry import get_model
 
 
 @functools.lru_cache(maxsize=64)

@@ -26,9 +26,7 @@ oracle as fallback for anything unmeasured — closing the sim-vs-real loop.
 
 from __future__ import annotations
 
-import bisect
 import dataclasses
-import heapq
 from typing import Callable, Optional
 
 import numpy as np

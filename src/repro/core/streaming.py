@@ -19,8 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

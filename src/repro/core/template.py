@@ -19,12 +19,11 @@ invocations are observed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Optional
 
-import numpy as np
 
 from repro.core import costmodel
-from repro.core.merging import MergeGroup, plan_groups
+from repro.core.merging import plan_groups
 from repro.core.tracing import AccessTrace
 from repro.hw import HardwareProfile
 

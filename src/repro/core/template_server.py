@@ -25,13 +25,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel
 from repro.core.api import LLMFunction
 from repro.core.fingerprint import TracedArray
 from repro.core.streaming import ForkSession, StreamEntry, WeightStreamer

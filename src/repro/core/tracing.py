@@ -33,7 +33,7 @@ runtime tracing overhead by construction (measured in fig20_overhead).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Callable, Sequence
 
 import jax
 import numpy as np

@@ -9,7 +9,7 @@ sharding for multi-host training and a resumable iterator state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

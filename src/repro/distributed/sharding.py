@@ -23,10 +23,8 @@ leaf falls back to replication rather than failing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
@@ -220,7 +218,6 @@ def cache_specs(model, cache_tree, mesh: Mesh, batch: int,
     softmax stats + the [B,H,hd] partial outputs cross shards, instead of
     psum'ing [B,H,T]-sized score tensors (hillclimb #1 in EXPERIMENTS.md
     §Perf; kept off for prefill where scores are seq-local anyway)."""
-    cfg = model.cfg
     model_n = mesh.shape["model"]
     dp = dp_axes(mesh)
     dp_n = _axis_size(mesh, dp)

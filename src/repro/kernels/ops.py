@@ -10,14 +10,14 @@ shape-divisibility fallbacks) so kernels stay minimal.
 
 from __future__ import annotations
 
-import functools
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention as _paged_decode_pallas)
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 
@@ -45,6 +45,21 @@ def decode_attention(q, k, v, length, impl: str = "pallas"):
         return ref.decode_attention_ref(q, k, v, length)
     bk = _pick_block(k.shape[2], want=256)
     return _decode_pallas(q, k, v, length, block_k=bk)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
+                           impl: str = "pallas"):
+    """q: [B, H, d]; k_pages, v_pages: [P, ps, KV, d] (the page arena in the
+    model's storage layout); page_table: [B, NB]; lengths: scalar or [B].
+    Returns [B, H, d]."""
+    if impl == "xla":
+        return ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                              page_table, lengths)
+    # kernel wants the head-major arena [P, KV, ps, d] — same per-step
+    # transpose the dense decode path pays for its [B, T, KV, hd] cache
+    return _paged_decode_pallas(q, k_pages.transpose(0, 2, 1, 3),
+                                v_pages.transpose(0, 2, 1, 3),
+                                page_table, lengths)
 
 
 def fused_rmsnorm(x, scale, eps: float = 1e-6, impl: str = "pallas"):

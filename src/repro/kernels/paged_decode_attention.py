@@ -1,0 +1,123 @@
+"""Paged flash-decoding: single-token attention against a block-paged KV
+cache, as a Pallas TPU kernel.
+
+The serving runtime stores KV state in one shared page arena instead of a
+dense per-slot cache (vLLM/PagedAttention layout): a request's cache is a
+page table of fixed-size blocks, so HBM holds the tokens that exist, not
+``n_slots * max_len`` worst cases.  The kernel design follows
+``decode_attention.py``:
+
+  * grid = (batch, kv_head, logical_blocks), blocks innermost (sequential
+    on-core) so the online-softmax state for the [G, d] query-group tile
+    lives in VMEM scratch across the whole pass;
+  * the page table and per-sequence lengths ride in as SCALAR-PREFETCH
+    arguments (``pltpu.PrefetchScalarGridSpec``): the K/V index maps read
+    ``page_table[b, t]`` to aim each block's HBM->VMEM DMA at the right
+    physical page — the gather never materializes a dense [B, T] cache;
+  * blocks entirely past a sequence's length are structurally skipped via
+    ``pl.when``; the tail block is masked elementwise;
+  * fp32 accumulation, output cast to the query dtype.
+
+Validated in interpret mode on CPU against ``ref.paged_decode_attention_ref``
+(see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+            l_ref, *, scale: float, ps: int, nb: int):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    # skip logical blocks entirely past the valid region (their page-table
+    # entries point at the null page; nothing to read)
+    @pl.when(t * ps < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [ps, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [ps, d]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, ps]
+        cols = t * ps + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(cols < length, scores, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t == nb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           interpret: bool | None = None):
+    """q: [B, H, d]; k_pages, v_pages: [P, KV, ps, d] (head-major arena);
+    page_table: [B, NB] int32; lengths: scalar or [B] valid positions.
+    Returns [B, H, d]."""
+    B, H, d = q.shape
+    P, KV, ps, _ = k_pages.shape
+    NB = page_table.shape[1]
+    assert H % KV == 0
+    G = H // KV
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    scale = 1.0 / np.sqrt(d)
+
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1),
+                               (B,))
+    page_table = jnp.asarray(page_table, jnp.int32)
+    qg = q.reshape(B, KV, G, d)
+
+    kernel = functools.partial(_kernel, scale=scale, ps=ps, nb=NB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # page table + lengths
+        grid=(B, KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, h, t, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda b, h, t, pt, ln: (pt[b, t], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda b, h, t, pt, ln: (pt[b, t], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d),
+                               lambda b, h, t, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, d), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, H, d)

@@ -53,6 +53,27 @@ def decode_attention_ref(q, k, v, length):
     return out.reshape(B, H, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """One-token attention against a block-paged KV cache.
+
+    q: [B, H, d]; k_pages, v_pages: [P, ps, KV, d] — one shared page arena
+    (page 0 is the runtime's null page, never owned by a request);
+    page_table: [B, NB] int32 physical page per logical block;
+    lengths: scalar or [B] valid positions.  Returns [B, H, d].
+
+    Semantics: gathering each sequence's pages in logical-block order must
+    reproduce ``decode_attention_ref`` on the equivalent dense cache.
+    """
+    B, H, d = q.shape
+    P, ps, KV, _ = k_pages.shape
+    NB = page_table.shape[1]
+    k = jnp.take(k_pages, page_table, axis=0)        # [B, NB, ps, KV, d]
+    v = jnp.take(v_pages, page_table, axis=0)
+    k = k.reshape(B, NB * ps, KV, d).transpose(0, 2, 1, 3)
+    v = v.reshape(B, NB * ps, KV, d).transpose(0, 2, 1, 3)
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-6):
     """x: [..., d]; scale: [d]."""
     xf = x.astype(jnp.float32)

@@ -34,7 +34,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch import roofline as rl
 from repro.models.registry import SHAPES, cells, get_model
 from repro.train.optimizer import OptimizerConfig, init_opt_state
@@ -93,7 +93,6 @@ def build_cell(arch: str, shape_name: str, mesh, fsdp: Optional[bool] = None,
     if cfg_over:
         from repro.models.registry import Model
         model = Model(model.cfg.replace(**cfg_over))
-    cfg = model.cfg
     sh = SHAPES[shape_name]
     mode, seq, batch = sh["mode"], sh["seq"], sh["batch"]
     dt = jnp.bfloat16
@@ -144,7 +143,8 @@ def build_cell(arch: str, shape_name: str, mesh, fsdp: Optional[bool] = None,
         i_specs = shd.batch_specs(inputs, mesh,
                                   seq_parallel=overrides.get("seq_parallel",
                                                              False))
-        fn = lambda p, i, c: model.prefill(p, i, c)
+        def fn(p, i, c):
+            return model.prefill(p, i, c)
         jitted = jax.jit(
             fn,
             in_shardings=(shd.to_named(p_specs, mesh),
@@ -173,7 +173,8 @@ def build_cell(arch: str, shape_name: str, mesh, fsdp: Optional[bool] = None,
         inputs = model.input_specs("decode", batch, seq, dtype=dt)
         i_specs = shd.batch_specs(inputs, mesh)
         pos = jax.ShapeDtypeStruct((), jnp.int32)
-        fn = lambda p, c, i, t: model.decode_step(p, c, i, t)
+        def fn(p, c, i, t):
+            return model.decode_step(p, c, i, t)
         jitted = jax.jit(
             fn,
             in_shardings=(shd.to_named(p_specs, mesh),

@@ -1,7 +1,7 @@
 """Re-run the fsdp-affected cells with the final solver (both meshes)."""
 import json
 import repro.launch.dryrun as dr
-from repro.models.registry import SHAPES, cells, get_model
+from repro.models.registry import cells
 
 AFFECTED = {"qwen2.5-32b", "chameleon-34b", "phi3.5-moe-42b-a6.6b",
             "deepseek-v3-671b"}

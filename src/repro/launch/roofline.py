@@ -19,9 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional, Sequence
+from typing import Sequence
 
-import numpy as np
 
 from repro.hw import HardwareProfile, TPU_V5E
 

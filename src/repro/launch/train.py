@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.data.pipeline import DataConfig
 from repro.models.registry import Model, get_config, get_smoke_model

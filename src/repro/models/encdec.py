@@ -12,15 +12,14 @@ the encoder states (length S_enc = the shape's seq_len, i.e. the big cache).
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.layers import (
-    ParamFactory, _sdpa, layernorm, make_mlp_params)
+from repro.models.layers import ParamFactory, _sdpa, layernorm
 
 
 def _ln_params(pf: ParamFactory, d: int) -> dict:

@@ -8,7 +8,7 @@ code yields real arrays (smoke tests / live serving) or
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -150,6 +150,8 @@ def attention_block(
     kv_cache: Optional[dict] = None,    # {'k','v': [B, T, KV, hd]} or None
     cache_pos: Optional[jax.Array] = None,  # scalar or [B]: write offset(s)
     causal: bool = True,
+    page_table: Optional[jax.Array] = None,  # [B, NB]: block-paged decode
+    page_size: int = 0,
 ):
     """GQA/MQA attention with optional KV cache.
 
@@ -159,6 +161,11 @@ def attention_block(
     sequence's K/V at its own offset (continuous batching: slots in one
     decode batch sit at different positions); vector offsets are
     decode-only (S == 1).
+
+    With ``page_table``, the cache leaves are one shared block-paged arena
+    ``[P, page_size, KV, hd]`` instead of per-sequence rows: logical block
+    ``j`` of sequence ``b`` lives in physical page ``page_table[b, j]``
+    (page 0 is the runtime's null page).  Paged mode is decode-only.
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -185,7 +192,33 @@ def attention_block(
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
 
-    if kv_cache is not None:
+    if kv_cache is not None and page_table is not None:
+        # block-paged decode: write this token's K/V into its page, then
+        # attend over the pages the table maps for each sequence
+        assert S == 1, "paged attention is decode-only"
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        ps = page_size
+        b = jnp.arange(B)
+        pages = page_table[b, cache_pos // ps]                   # [B]
+        off = cache_pos % ps
+        ck = ck.at[pages, off].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[pages, off].set(v[:, 0].astype(cv.dtype))
+        new_cache = {"k": ck, "v": cv}
+        if cfg.attn_impl == "pallas":
+            from repro.kernels import ops as kops
+            out = kops.paged_decode_attention(q[:, 0], ck, cv, page_table,
+                                              cache_pos + 1)
+            out = out[:, None]                                   # [B,1,H,hd]
+        else:
+            T = page_table.shape[1] * ps
+            kg = jnp.take(ck, page_table, axis=0).reshape(B, T, KV, hd)
+            vg = jnp.take(cv, page_table, axis=0).reshape(B, T, KV, hd)
+            kv_pos = jnp.arange(T)[None, None, None, None, :]
+            mask = kv_pos <= positions[:, :, None, None, None]
+            qg = q.reshape(B, S, KV, G, hd)
+            out = _sdpa(qg, kg, vg, mask, cfg.attn_logit_softcap,
+                        seq_shard=cfg.attn_seq_shard_constraint)
+    elif kv_cache is not None:
         ck, cv = kv_cache["k"], kv_cache["v"]
         if jnp.ndim(cache_pos) == 0:
             ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))

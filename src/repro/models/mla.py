@@ -41,6 +41,8 @@ def mla_attention_block(
     positions: jax.Array,               # [B, S]
     kv_cache: Optional[dict] = None,    # {'c_kv': [B,T,kvr], 'k_rope': [B,T,dr]}
     cache_pos: Optional[jax.Array] = None,
+    page_table: Optional[jax.Array] = None,  # [B, NB]: block-paged decode
+    page_size: int = 0,
 ):
     B, S, D = x.shape
     H = cfg.n_heads
@@ -58,7 +60,24 @@ def mla_attention_block(
     c_kv = rmsnorm(kv[..., :kvr], p["kv_a_norm"], cfg.norm_eps)      # [B,S,kvr]
     k_rope = rope(kv[..., kvr:][..., None, :], positions, cfg.rope_theta)[..., 0, :]
 
-    if kv_cache is not None:
+    if kv_cache is not None and page_table is not None:
+        # block-paged decode: cache leaves are shared page arenas
+        # [P, ps, kvr] / [P, ps, dr]; the latent + rope-key for this token
+        # land in the page the table maps for position ``cache_pos``
+        assert S == 1, "paged MLA attention is decode-only"
+        ps = page_size
+        b = jnp.arange(B)
+        pages = page_table[b, cache_pos // ps]
+        off = cache_pos % ps
+        cc = kv_cache["c_kv"].at[pages, off].set(
+            c_kv[:, 0].astype(kv_cache["c_kv"].dtype))
+        cr = kv_cache["k_rope"].at[pages, off].set(
+            k_rope[:, 0].astype(kv_cache["k_rope"].dtype))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        T = page_table.shape[1] * ps
+        lat = jnp.take(cc, page_table, axis=0).reshape(B, T, kvr)
+        kr = jnp.take(cr, page_table, axis=0).reshape(B, T, dr)
+    elif kv_cache is not None:
         if jnp.ndim(cache_pos) == 0:
             cc = jax.lax.dynamic_update_slice(
                 kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype), (0, cache_pos, 0))

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +61,20 @@ class Model:
         return mod.make_cache(self.cfg, batch, max_len, abstract=abstract,
                               dtype=dtype)
 
+    @property
+    def supports_paged_kv(self) -> bool:
+        """True for families whose decode cache grows with sequence length
+        (dense/moe, incl. MLA) — the ones the paged KV pool serves."""
+        return not self.is_encdec and transformer.supports_paged_kv(self.cfg)
+
+    def make_paged_cache(self, n_pages: int, page_size: int,
+                         abstract: bool = False, dtype=None):
+        """Shared block-paged KV arena (see ``transformer.make_paged_cache``)."""
+        if self.is_encdec:
+            raise ValueError(f"{self.cfg.name}: enc-dec has no paged KV layout")
+        return transformer.make_paged_cache(self.cfg, n_pages, page_size,
+                                            abstract=abstract, dtype=dtype)
+
     # ---- training --------------------------------------------------------
     def forward(self, params, inputs: dict, training: bool = True):
         if self.is_encdec:
@@ -93,6 +106,17 @@ class Model:
                                       inputs["tokens"], pos)
         return transformer.decode_step(params, self.cfg, cache,
                                        inputs["tokens"], pos)
+
+    def decode_step_paged(self, params, cache, inputs: dict, pos,
+                          page_table, page_size: int):
+        """One decode step over a block-paged arena: ``pos`` is an int32
+        vector [B] of per-sequence positions and ``page_table`` [B, NB]
+        maps each sequence's logical blocks to physical pages."""
+        pos = jnp.asarray(pos, jnp.int32)
+        page_table = jnp.asarray(page_table, jnp.int32)
+        return transformer.decode_step_paged(params, self.cfg, cache,
+                                             inputs["tokens"], pos,
+                                             page_table, page_size)
 
     # ---- cache slot pooling (continuous batching) -----------------------
     # Every cache leaf across all families lays batch out on axis 1 (axis 0

@@ -18,12 +18,10 @@ Entry points (uniform across families, dispatched by ``cfg.family``):
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models import ssm
@@ -180,18 +178,51 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """Block-paged KV applies to attention caches that grow with sequence
+    length: the dense/moe (incl. MLA) families.  SSM/xLSTM/hybrid state is
+    constant-size per slot, so those keep the dense slot pool."""
+    return cfg.family in ("dense", "moe")
+
+
+def make_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     abstract: bool = False, dtype=None) -> Cache:
+    """One shared KV page arena: the (batch, max_len) axes of ``make_cache``
+    become (n_pages, page_size).  Logical position ``t`` of a request lives
+    at ``[layer, page_table[slot, t // page_size], t % page_size]``."""
+    if not supports_paged_kv(cfg):
+        raise ValueError(
+            f"{cfg.name}: {cfg.family!r} family has no paged KV layout")
+    dt = _dtype(cfg, dtype)
+    L = cfg.n_layers
+    if cfg.use_mla:
+        return {
+            "c_kv": _mk(abstract, (L, n_pages, page_size, cfg.kv_lora_rank), dt),
+            "k_rope": _mk(abstract, (L, n_pages, page_size, cfg.qk_rope_dim), dt),
+        }
+    return {
+        "k": _mk(abstract, (L, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": _mk(abstract, (L, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
 # ---------------------------------------------------------------------------
 # block bodies
 # ---------------------------------------------------------------------------
 
-def _dense_block(bp, x, cfg, positions, kv_cache, cache_pos):
+def _dense_block(bp, x, cfg, positions, kv_cache, cache_pos,
+                 page_table=None, page_size=0):
     h = rmsnorm(x, bp["attn_norm"], cfg.norm_eps)
     if cfg.use_mla:
         a, new_cache = mla_attention_block(bp["attn"], h, cfg, positions,
-                                           kv_cache, cache_pos)
+                                           kv_cache, cache_pos,
+                                           page_table=page_table,
+                                           page_size=page_size)
     else:
         a, new_cache = attention_block(bp["attn"], h, cfg, positions,
-                                       kv_cache, cache_pos)
+                                       kv_cache, cache_pos,
+                                       page_table=page_table,
+                                       page_size=page_size)
     x = x + a
     h = rmsnorm(x, bp["mlp_norm"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -203,13 +234,18 @@ def _dense_block(bp, x, cfg, positions, kv_cache, cache_pos):
     return x + m, new_cache, aux
 
 
-def _scan_decoder_blocks(params, cfg, x, positions, cache, cache_pos, training):
-    """Scan over stacked dense/moe blocks.  cache may be None (training)."""
+def _scan_decoder_blocks(params, cfg, x, positions, cache, cache_pos,
+                         training, page_table=None, page_size=0):
+    """Scan over stacked dense/moe blocks.  cache may be None (training).
+    ``page_table`` (shared across layers, not scanned) switches the
+    per-layer cache slices to the block-paged arena layout."""
 
     def body(carry, xs):
         h = carry
         bp, bc = xs
-        h, new_c, aux = _dense_block(bp, h, cfg, positions, bc, cache_pos)
+        h, new_c, aux = _dense_block(bp, h, cfg, positions, bc, cache_pos,
+                                     page_table=page_table,
+                                     page_size=page_size)
         return h, (new_c, aux)
 
     body_fn = body
@@ -406,6 +442,28 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
         positions = pos[:, None].astype(jnp.int32)
     x, new_cache, _ = _backbone(params, cfg, x, positions, cache, pos,
                                 training=False)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(x, params, cfg.tied_embeddings)
+    return logits[:, 0], new_cache
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, cache: Cache,
+                      tokens: jax.Array, pos: jax.Array,
+                      page_table: jax.Array, page_size: int):
+    """One decode step over a block-paged KV arena.  tokens: [B, 1];
+    pos: int32 vector [B] of per-sequence positions; page_table: [B, NB]
+    int32 physical page per logical block (the slot axis of the serving
+    pool).  ``cache`` comes from :func:`make_paged_cache`."""
+    if not supports_paged_kv(cfg):
+        raise ValueError(
+            f"{cfg.name}: {cfg.family!r} family has no paged decode path")
+    x = embed_tokens(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]
+    x, new_cache, _ = _scan_decoder_blocks(params, cfg, x, positions, cache,
+                                           pos, training=False,
+                                           page_table=page_table,
+                                           page_size=page_size)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(x, params, cfg.tied_embeddings)
     return logits[:, 0], new_cache

@@ -1,7 +1,9 @@
 """Serving runtime subsystem.
 
   engine      — sequential fixed-batch generation (the reference path)
-  kv_pool     — slot-indexed KV/state cache shared by one decode batch
+  kv_pool     — KV cache pools: dense slot-indexed (recurrent-state
+                families) and block-paged with per-slot page tables
+                (attention families)
   continuous  — continuous-batching engine (admission queue + step loop)
   faas        — FaaSRuntime front-end over TemplateServer + prewarm +
                 continuous batching, plus measured service-time oracles
@@ -13,10 +15,12 @@ from repro.runtime.continuous import (ContinuousBatchingEngine, Request,
 from repro.runtime.engine import Engine, GenerationResult, sample_greedy
 from repro.runtime.faas import (FaaSRuntime, MeasuredServiceTimes,
                                 SubmitResult, measure_service_times)
-from repro.runtime.kv_pool import KVCachePool
+from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
+                                   PoolExhausted)
 
 __all__ = [
     "ContinuousBatchingEngine", "Engine", "FaaSRuntime", "GenerationResult",
-    "KVCachePool", "MeasuredServiceTimes", "Request", "RequestOutput",
-    "SubmitResult", "measure_service_times", "sample_greedy",
+    "KVCachePool", "MeasuredServiceTimes", "PagedKVCachePool",
+    "PoolExhausted", "Request", "RequestOutput", "SubmitResult",
+    "measure_service_times", "sample_greedy",
 ]

@@ -13,6 +13,13 @@ completion, this engine keeps an admission queue and a step loop:
   * **retirement** — finished requests release their slot, which unblocks
     the next queued admission on the same step.
 
+Attention families (dense / moe / MLA) store KV state in a block-paged
+:class:`~repro.runtime.kv_pool.PagedKVCachePool`: admission writes only the
+prompt's pages, decode maps one more page per boundary crossing, and
+retirement frees pages — so arena capacity tracks the tokens that exist,
+not ``n_slots * max_len`` worst cases.  Recurrent-state families (SSM /
+xLSTM / hybrid) keep the dense slot pool; their state is constant-size.
+
 Greedy decoding is bit-identical to the sequential ``Engine.generate``
 per request (tested): the per-slot position vector reproduces exactly the
 positions, cache writes and attention masks of an isolated batch-1 run.
@@ -33,7 +40,7 @@ from repro.core.streaming import (ForkSession, streamed_prefill,
                                   supports_streamed_prefill)
 from repro.models.registry import Model
 from repro.runtime.engine import sample_greedy
-from repro.runtime.kv_pool import KVCachePool
+from repro.runtime.kv_pool import KVCachePool, PagedKVCachePool
 
 
 @dataclasses.dataclass
@@ -78,7 +85,9 @@ class ContinuousBatchingEngine:
                  max_len: int = 128,
                  prefill_fn: Optional[Callable] = None,
                  decode_fn: Optional[Callable] = None,
-                 donate_cache: bool = True):
+                 donate_cache: bool = True,
+                 paged: Optional[bool] = None, page_size: int = 8,
+                 n_pages: Optional[int] = None):
         if model.is_encdec:
             raise NotImplementedError(
                 "continuous batching needs per-slot decode positions; the "
@@ -86,7 +95,17 @@ class ContinuousBatchingEngine:
         self.model = model
         self.session = params if isinstance(params, ForkSession) else None
         self._params = None if self.session is not None else params
-        self.pool = KVCachePool(model, n_slots, max_len)
+        # block-paged KV for attention families (their cache grows with the
+        # sequence), dense slots for constant-size recurrent state
+        if paged is None:
+            paged = model.supports_paged_kv
+        self.paged = paged
+        if paged:
+            self.pool: Any = PagedKVCachePool(model, n_slots, max_len,
+                                              page_size=page_size,
+                                              n_pages=n_pages)
+        else:
+            self.pool = KVCachePool(model, n_slots, max_len)
         self.queue: collections.deque = collections.deque()
         self.active: dict = {}                       # slot -> _Active
         self.results: dict = {}                      # req_id -> RequestOutput
@@ -95,10 +114,17 @@ class ContinuousBatchingEngine:
             prefill_fn = jax.jit(
                 lambda p, inputs, cache: model.prefill(p, inputs, cache))
         if decode_fn is None:
-            decode_fn = jax.jit(
-                lambda p, cache, toks, pos: model.decode_step(
-                    p, cache, {"tokens": toks}, pos),
-                donate_argnums=(1,) if donate_cache else ())
+            if paged:
+                decode_fn = jax.jit(
+                    lambda p, cache, toks, pos, pt: model.decode_step_paged(
+                        p, cache, {"tokens": toks}, pos, pt,
+                        self.pool.page_size),
+                    donate_argnums=(1,) if donate_cache else ())
+            else:
+                decode_fn = jax.jit(
+                    lambda p, cache, toks, pos: model.decode_step(
+                        p, cache, {"tokens": toks}, pos),
+                    donate_argnums=(1,) if donate_cache else ())
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         # per-slot feedback state (free slots decode position 0 / token 0;
@@ -130,6 +156,14 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
                 f"pool max_len={self.pool.max_len}")
+        if self.paged:
+            # reject what could NEVER be admitted (undersized arena) so the
+            # step loop can't hang waiting for pages that don't exist
+            need = self.pool.blocks_for(len(prompt) + max_new_tokens)
+            if need > self.pool.n_pages - 1:
+                raise ValueError(
+                    f"request needs {need} KV pages but the arena has only "
+                    f"{self.pool.n_pages - 1} allocatable pages")
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, prompt, max_new_tokens,
@@ -137,10 +171,23 @@ class ContinuousBatchingEngine:
         return rid
 
     # ------------------------------------------------------------------
+    def _can_admit(self, req: Request) -> bool:
+        if self.paged:
+            return self.pool.can_admit(len(req.prompt) + req.max_new_tokens)
+        return bool(self.pool.n_free)
+
     def _admit(self, req: Request) -> None:
-        slot = self.pool.alloc()
+        if self.paged:
+            slot = self.pool.alloc(len(req.prompt), req.max_new_tokens)
+        else:
+            slot = self.pool.alloc()
         inputs = {"tokens": jnp.asarray(req.prompt[None, :])}
-        cache = self.model.make_cache(1, self.pool.max_len)
+        # prefill runs on a transient batch-1 dense cache either way (same
+        # executable as the dense path); paged pools then keep only the
+        # prompt's pages
+        prefill_len = (self.pool.padded_len if self.paged
+                       else self.pool.max_len)
+        cache = self.model.make_cache(1, prefill_len)
         streamed = (self.session is not None and self._params is None
                     and supports_streamed_prefill(self.model))
         if streamed:
@@ -150,7 +197,10 @@ class ContinuousBatchingEngine:
         tok = sample_greedy(logits)                      # [1]
         tok.block_until_ready()
         ttft = time.perf_counter() - req.submit_s
-        self.pool.write_slot(slot, cache)
+        if self.paged:
+            self.pool.write_prompt(slot, cache, len(req.prompt))
+        else:
+            self.pool.write_slot(slot, cache)
         self._tok[slot, 0] = int(tok[0])
         # next decode writes the first generated token at position len(prompt)
         self._pos[slot] = len(req.prompt)
@@ -179,13 +229,22 @@ class ContinuousBatchingEngine:
         """Admit what fits, run one batched decode, retire the finished.
 
         Returns False once the engine is fully drained."""
-        while self.queue and self.pool.n_free:
+        while self.queue and self._can_admit(self.queue[0]):
             self._admit(self.queue.popleft())
         if not self.active:
             return bool(self.queue)
-        logits, self.pool.cache = self.decode_fn(
-            self.params(), self.pool.cache, jnp.asarray(self._tok),
-            jnp.asarray(self._pos))
+        if self.paged:
+            # crossing a page boundary this step maps one more page
+            # (reserved at admission, so this can never exhaust the pool)
+            for slot in self.active:
+                self.pool.ensure_len(slot, int(self._pos[slot]) + 1)
+            logits, self.pool.cache = self.decode_fn(
+                self.params(), self.pool.cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), jnp.asarray(self.pool.page_table))
+        else:
+            logits, self.pool.cache = self.decode_fn(
+                self.params(), self.pool.cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos))
         nxt = np.asarray(sample_greedy(logits))          # [n_slots]
         for slot in list(self.active):
             st = self.active[slot]

@@ -53,7 +53,6 @@ class Engine:
                  donate_cache: bool = True):
         self.model = model
         self.params = params
-        cfg = model.cfg
         if prefill_fn is None:
             prefill_fn = jax.jit(
                 lambda p, inputs, cache: model.prefill(p, inputs, cache))

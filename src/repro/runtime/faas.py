@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,6 @@ import numpy as np
 from repro.core import api as tidal
 from repro.core.api import LLMFunction
 from repro.core.prewarm import ExecutableCache, ProcessPool
-from repro.core.streaming import ForkSession
 from repro.core.template_server import ForkStats, TemplateServer
 from repro.models.registry import get_smoke_model
 from repro.runtime.continuous import ContinuousBatchingEngine
@@ -74,11 +73,12 @@ class FaaSRuntime:
                  n_slots: int = 4, max_len: int = 64,
                  keep_alive_s: float = 60.0, max_warm_engines: int = 8,
                  prewarm: bool = True, pool_workers: int = 2,
-                 trace_seq: int = 32):
+                 trace_seq: int = 32, page_size: int = 8):
         self.server = server or TemplateServer(trace_batch=1,
                                                trace_seq=trace_seq)
         self.n_slots = n_slots
         self.max_len = max_len
+        self.page_size = page_size
         self.keep_alive_s = keep_alive_s
         self.max_warm_engines = max_warm_engines
         self.prewarm = prewarm
@@ -99,10 +99,17 @@ class FaaSRuntime:
         if key not in self._serve_fns:
             prefill = jax.jit(
                 lambda p, i, c, m=model: m.prefill(p, i, c))
-            decode = jax.jit(
-                lambda p, c, t, pos, m=model: m.decode_step(
-                    p, c, {"tokens": t}, pos),
-                donate_argnums=(1,))
+            if model.supports_paged_kv:
+                # attention families decode against the block-paged arena
+                decode = jax.jit(
+                    lambda p, c, t, pos, pt, m=model: m.decode_step_paged(
+                        p, c, {"tokens": t}, pos, pt, self.page_size),
+                    donate_argnums=(1,))
+            else:
+                decode = jax.jit(
+                    lambda p, c, t, pos, m=model: m.decode_step(
+                        p, c, {"tokens": t}, pos),
+                    donate_argnums=(1,))
             self._serve_fns[key] = (prefill, decode)
         return self._serve_fns[key]
 
@@ -130,23 +137,33 @@ class FaaSRuntime:
         prefill_fn, decode_fn = self._serve_fns_for(fn.name)
         kp = (id(model), "prefill", 1, seq, self.max_len)
         kd = (id(model), "decode-pool", self.n_slots, self.max_len)
+        paged = model.supports_paged_kv
+        # shape bookkeeping mirrors PagedKVCachePool's defaults so the
+        # pre-warmed executables are exactly the ones engines will call
+        bps = -(-self.max_len // self.page_size)
+        prefill_len = bps * self.page_size if paged else self.max_len
 
         def warm_prefill():
             params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                   model.init_params(abstract=True))
             inputs = {"tokens": jnp.zeros((1, seq), jnp.int32)}
             jax.block_until_ready(
-                prefill_fn(params, inputs, model.make_cache(1, self.max_len)))
+                prefill_fn(params, inputs, model.make_cache(1, prefill_len)))
             return prefill_fn
 
         def warm_decode():
             params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                   model.init_params(abstract=True))
-            cache = model.make_cache(self.n_slots, self.max_len)
-            jax.block_until_ready(
-                decode_fn(params, cache,
-                          jnp.zeros((self.n_slots, 1), jnp.int32),
-                          jnp.zeros((self.n_slots,), jnp.int32)))
+            toks = jnp.zeros((self.n_slots, 1), jnp.int32)
+            pos = jnp.zeros((self.n_slots,), jnp.int32)
+            if paged:
+                cache = model.make_paged_cache(1 + self.n_slots * bps,
+                                               self.page_size)
+                pt = jnp.zeros((self.n_slots, bps), jnp.int32)
+                jax.block_until_ready(decode_fn(params, cache, toks, pos, pt))
+            else:
+                cache = model.make_cache(self.n_slots, self.max_len)
+                jax.block_until_ready(decode_fn(params, cache, toks, pos))
             return decode_fn
 
         self.exe_cache.get_or_compile(kp, warm_prefill)
@@ -192,7 +209,8 @@ class FaaSRuntime:
         engine = ContinuousBatchingEngine(
             self.functions[fn_name].model, session,
             n_slots=self.n_slots, max_len=self.max_len,
-            prefill_fn=prefill_fn, decode_fn=decode_fn)
+            prefill_fn=prefill_fn, decode_fn=decode_fn,
+            page_size=self.page_size)
         self._engines[key] = _WarmEngine(engine, now)
         self._invoked.add(fn_name)
         return key, engine, kind, stats

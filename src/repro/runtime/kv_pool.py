@@ -1,13 +1,29 @@
-"""Fixed-capacity KV-cache slot pool: one cache, many invocations.
+"""KV-cache pools for the continuous-batching runtime.
 
-The serving runtime decodes every active invocation in ONE batched
-``decode_step`` per iteration (continuous batching).  The pool owns a single
-cache pytree laid out exactly as ``model.make_cache(n_slots, max_len)`` —
-the batch axis doubles as the slot axis — so admission is a scatter of a
-request's batch-1 prefilled cache into a free slot and retirement just
-returns the slot index to the free list.  Gather/scatter go through the
-uniform ``Model.gather_cache_slots`` / ``Model.scatter_cache_slots`` API
-(batch lives on axis 1 of every cache leaf across model families).
+Two layouts share the slot-indexed front:
+
+  * :class:`KVCachePool` — the dense layout: one cache pytree laid out
+    exactly as ``model.make_cache(n_slots, max_len)`` (batch axis == slot
+    axis), every slot reserving a worst-case ``max_len`` row.  This remains
+    the path for families whose decode state is CONSTANT-size per slot
+    (SSM / xLSTM / hybrid recurrent state): paging buys them nothing.
+
+  * :class:`PagedKVCachePool` — the block-paged layout for attention
+    families (dense / moe / MLA): one shared arena of fixed-size KV pages
+    (``model.make_paged_cache``) plus a per-slot page table.  A request
+    only occupies the pages its tokens fill (prompt pages at admission,
+    one more page each time decode crosses a page boundary), so the same
+    HBM budget admits several times more mixed-length invocations than
+    dense slots — TIDAL's resident-state footprint, attacked at the KV
+    level.
+
+Allocation policy (paged): admission RESERVES the request's worst-case
+block count (``ceil((prompt + max_new) / page_size)``) against the free
+pool but maps pages lazily.  Reservation keeps admission deadlock-free —
+an admitted request can always grow to its declared maximum, so decode
+never stalls waiting for a page — while the arena is still sized for the
+sum of actual request lengths rather than ``n_slots * max_len``.
+Exhaustion raises :class:`PoolExhausted` instead of hanging admission.
 """
 
 from __future__ import annotations
@@ -15,8 +31,13 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 
 from repro.models.registry import Model
+
+
+class PoolExhausted(RuntimeError):
+    """No free slot/pages for an allocation (admission should defer)."""
 
 
 class KVCachePool:
@@ -30,6 +51,7 @@ class KVCachePool:
         self.max_len = max_len
         self.cache = model.make_cache(n_slots, max_len)
         self._free = list(range(n_slots - 1, -1, -1))
+        self._free_set = set(self._free)
 
     # ---- slot bookkeeping -------------------------------------------------
     @property
@@ -38,13 +60,16 @@ class KVCachePool:
 
     def alloc(self) -> int:
         if not self._free:
-            raise RuntimeError("KVCachePool exhausted: no free slots")
-        return self._free.pop()
+            raise PoolExhausted("KVCachePool exhausted: no free slots")
+        slot = self._free.pop()
+        self._free_set.discard(slot)
+        return slot
 
     def release(self, slot: int) -> None:
-        if slot in self._free or not (0 <= slot < self.n_slots):
+        if slot in self._free_set or not (0 <= slot < self.n_slots):
             raise ValueError(f"bad slot release: {slot}")
         self._free.append(slot)
+        self._free_set.add(slot)
 
     # ---- cache movement ---------------------------------------------------
     def write_slot(self, slot: int, sub_cache: Any) -> None:
@@ -55,6 +80,163 @@ class KVCachePool:
     def read_slot(self, slot: int) -> Any:
         """Gather ``slot`` back out as a batch-1 cache."""
         return self.model.gather_cache_slots(self.cache, [slot])
+
+    def nbytes(self) -> int:
+        return sum(int(l.nbytes) for l in jax.tree.leaves(self.cache))
+
+
+class PagedKVCachePool:
+    """Block-paged KV arena + per-slot page tables.
+
+    Page 0 is the NULL page: free slots (which still ride in the shared
+    decode batch at position 0) and unallocated logical blocks point at it,
+    so their cache writes scribble on a page no request owns and their
+    reads are masked out by the per-slot length.  Allocatable pages are
+    ``1 .. n_pages-1``.
+    """
+
+    NULL_PAGE = 0
+
+    def __init__(self, model: Model, n_slots: int, max_len: int,
+                 page_size: int = 8, n_pages: int | None = None):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if not model.supports_paged_kv:
+            raise ValueError(
+                f"{model.cfg.name}: family {model.cfg.family!r} has no "
+                "paged KV layout (use the dense KVCachePool)")
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.blocks_per_slot = -(-max_len // page_size)
+        # logical span of a full slot (page-multiple; == max_len when the
+        # page size divides it, which is also the bit-parity condition
+        # against the dense layout's reduction shapes)
+        self.padded_len = self.blocks_per_slot * page_size
+        if n_pages is None:
+            # default: capacity-equal to the dense pool (every slot can
+            # grow to max_len) — benchmarks/servers size it tighter
+            n_pages = 1 + n_slots * self.blocks_per_slot
+        if n_pages < 2:
+            raise ValueError("n_pages must be >= 2 (null page + 1)")
+        self.n_pages = n_pages
+        self.cache = model.make_paged_cache(n_pages, page_size)
+        self.page_table = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+        self._free_slots = list(range(n_slots - 1, -1, -1))
+        self._free_slot_set = set(self._free_slots)
+        self._free_pages = list(range(n_pages - 1, 0, -1))
+        self._reserved = 0                 # reserved-but-unmapped blocks
+        self._mapped: dict[int, int] = {}  # slot -> mapped block count
+        self._budget: dict[int, int] = {}  # slot -> reserved block total
+
+    # ---- accounting -------------------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.page_size))
+
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def n_available_pages(self) -> int:
+        """Pages neither mapped nor promised to an admitted request."""
+        return len(self._free_pages) - self._reserved
+
+    def can_admit(self, n_tokens_total: int) -> bool:
+        return (bool(self._free_slots)
+                and self.blocks_for(n_tokens_total) <= self.n_available_pages)
+
+    # ---- alloc / grow / release ------------------------------------------
+    def alloc(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Claim a slot and reserve the request's worst-case block count."""
+        total = self.blocks_for(prompt_len + max_new_tokens)
+        if total > self.blocks_per_slot:
+            raise ValueError(
+                f"request needs {total} pages but a slot's page table "
+                f"holds {self.blocks_per_slot} (max_len={self.max_len})")
+        if total > self.n_pages - 1:
+            raise ValueError(
+                f"request needs {total} pages but the arena only has "
+                f"{self.n_pages - 1} allocatable pages")
+        if not self._free_slots:
+            raise PoolExhausted("PagedKVCachePool exhausted: no free slots")
+        if total > self.n_available_pages:
+            raise PoolExhausted(
+                f"PagedKVCachePool exhausted: need {total} pages, "
+                f"{self.n_available_pages} available")
+        slot = self._free_slots.pop()
+        self._free_slot_set.discard(slot)
+        self._reserved += total
+        self._budget[slot] = total
+        self._mapped[slot] = 0
+        return slot
+
+    def ensure_len(self, slot: int, n_tokens: int) -> None:
+        """Map pages so positions ``0 .. n_tokens-1`` are backed."""
+        if slot not in self._budget:
+            raise ValueError(f"slot {slot} is not allocated")
+        need = self.blocks_for(n_tokens)
+        if need > self._budget[slot]:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceeds the reserved "
+                f"budget of {self._budget[slot]} pages")
+        while self._mapped[slot] < need:
+            if not self._free_pages:        # unreachable within budget
+                raise PoolExhausted("PagedKVCachePool: free list empty")
+            page = self._free_pages.pop()
+            self.page_table[slot, self._mapped[slot]] = page
+            self._mapped[slot] += 1
+            self._reserved -= 1
+
+    def release(self, slot: int) -> None:
+        if slot in self._free_slot_set or not (0 <= slot < self.n_slots):
+            raise ValueError(f"bad slot release: {slot}")
+        mapped = self._mapped.pop(slot)
+        budget = self._budget.pop(slot)
+        self._free_pages.extend(int(p) for p in self.page_table[slot, :mapped])
+        self._reserved -= budget - mapped
+        self.page_table[slot, :] = self.NULL_PAGE
+        self._free_slots.append(slot)
+        self._free_slot_set.add(slot)
+
+    # ---- cache movement ---------------------------------------------------
+    def write_prompt(self, slot: int, sub_cache: Any, n_tokens: int) -> None:
+        """Copy a batch-1 prefilled dense cache's first ``n_tokens``
+        positions into ``slot``'s pages (allocating them).  ``sub_cache``
+        leaves are ``[L, 1, T, ...]`` with ``T`` a page multiple covering
+        ``n_tokens`` — only the occupied pages are written."""
+        self.ensure_len(slot, n_tokens)
+        nb = self.blocks_for(n_tokens)
+        pages = self.page_table[slot, :nb]
+        ps = self.page_size
+
+        def copy(arena, sub):
+            L, _, T = sub.shape[:3]
+            blocks = sub[:, 0].reshape((L, T // ps, ps) + sub.shape[3:])
+            return arena.at[:, pages].set(blocks[:, :nb].astype(arena.dtype))
+
+        self.cache = jax.tree.map(copy, self.cache, sub_cache)
+
+    def read_slot(self, slot: int, n_tokens: int) -> Any:
+        """Gather ``slot``'s first ``n_tokens`` positions back out as a
+        batch-1 dense cache (page-multiple length)."""
+        nb = self.blocks_for(n_tokens)
+        pages = self.page_table[slot, :nb]
+
+        def gather(arena):
+            blocks = arena[:, pages]                   # [L, nb, ps, ...]
+            L = blocks.shape[0]
+            return blocks.reshape(
+                (L, 1, nb * self.page_size) + blocks.shape[3:])
+
+        return jax.tree.map(gather, self.cache)
 
     def nbytes(self) -> int:
         return sum(int(l.nbytes) for l in jax.tree.leaves(self.cache))

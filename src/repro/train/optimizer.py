@@ -8,7 +8,7 @@ train_4k) — the choice is recorded per-cell in EXPERIMENTS.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ latest checkpoint including data-stream position) and periodic saves.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

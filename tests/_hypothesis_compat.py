@@ -57,7 +57,6 @@ except ImportError:
 
             @functools.wraps(fn)
             def run(*args, **kwargs):
-                names = list(strategies_kw)
                 draws = []
                 for i in range(max(len(s.edges)
                                    for s in strategies_kw.values())):

@@ -1,6 +1,5 @@
 """Cost-model invariants + reproduction of the paper's headline relations."""
 
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
@@ -66,7 +65,6 @@ def test_loading_order_ablation(plan8b):
 def test_merging_reduces_overhead():
     """Table 3: with many tiny tensors, fewer groups -> lower TTFT."""
     plan = plan_for("qwen2.5-32b", 1, 512)      # many bias tensors
-    n = len(plan.order)
     t_none = cm.ttft_tidal(plan, HW, n_groups=None).total
     t_300 = cm.ttft_tidal(plan, HW, n_groups=300).total
     assert t_300 <= t_none

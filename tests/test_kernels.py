@@ -104,6 +104,83 @@ def test_decode_attention_any_length(length):
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+def _page_arena(key, B, KV, d, ps, NB, n_pages):
+    """Random arena + disjoint per-sequence page tables (page 0 = null)."""
+    ks = jax.random.split(key, 3)
+    kp = jax.random.normal(ks[0], (n_pages, ps, KV, d))
+    vp = jax.random.normal(ks[1], (n_pages, ps, KV, d))
+    perm = np.asarray(jax.random.permutation(ks[2], n_pages - 1) + 1)
+    pt = np.zeros((B, NB), np.int32)
+    flat = perm[:B * NB].reshape(B, NB)
+    pt[:, :] = flat
+    return kp, vp, jnp.asarray(pt)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,ps,NB,d", [
+    (2, 8, 2, 64, 8, 64),       # GQA 4:1
+    (1, 4, 4, 128, 4, 128),     # MHA, big pages
+    (3, 8, 1, 16, 6, 64),       # MQA, small pages
+])
+def test_paged_decode_attention_sweep(B, H, KV, ps, NB, d, dtype):
+    n_pages = B * NB + 1
+    kp, vp, pt = _page_arena(RNG, B, KV, d, ps, NB, n_pages)
+    kp, vp = kp.astype(dtype), vp.astype(dtype)
+    q = jax.random.normal(jax.random.fold_in(RNG, 9), (B, H, d), dtype)
+    lengths = jnp.asarray([(NB * ps) // (i + 1) for i in range(B)], jnp.int32)
+    out = ops.paged_decode_attention(q, kp, vp, pt, lengths)
+    want = ref.paged_decode_attention_ref(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_matches_dense_decode():
+    """Scattering a dense cache into pages (in any physical order) must
+    reproduce the dense decode kernel's result exactly."""
+    B, H, KV, T, d, ps = 2, 8, 2, 256, 64, 64
+    NB = T // ps
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, H, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    # scatter each sequence's blocks into a shuffled shared arena
+    n_pages = B * NB + 1
+    perm = np.asarray(jax.random.permutation(jax.random.fold_in(RNG, 3),
+                                             n_pages - 1) + 1)
+    pt = perm[:B * NB].reshape(B, NB)
+    kp = np.zeros((n_pages, ps, KV, d), np.float32)
+    vp = np.zeros((n_pages, ps, KV, d), np.float32)
+    kb = np.asarray(k).transpose(0, 2, 1, 3).reshape(B, NB, ps, KV, d)
+    vb = np.asarray(v).transpose(0, 2, 1, 3).reshape(B, NB, ps, KV, d)
+    for b in range(B):
+        for j in range(NB):
+            kp[pt[b, j]] = kb[b, j]
+            vp[pt[b, j]] = vb[b, j]
+    lengths = jnp.asarray([T - 7, T // 2], jnp.int32)
+    dense = ops.decode_attention(q, k, v, lengths)
+    paged = ops.paged_decode_attention(q, jnp.asarray(kp), jnp.asarray(vp),
+                                       jnp.asarray(pt), lengths)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               atol=2e-5)
+
+
+@given(length=st.integers(1, 256))
+@settings(max_examples=10, deadline=None)
+def test_paged_decode_any_length(length):
+    """Tail-block masking must be exact for every cache occupancy."""
+    B, KV, d, ps, NB = 1, 4, 64, 32, 8
+    kp, vp, pt = _page_arena(jax.random.fold_in(RNG, 17), B, KV, d, ps, NB,
+                             B * NB + 1)
+    q = jax.random.normal(jax.random.fold_in(RNG, 23), (B, 4, d))
+    out = ops.paged_decode_attention(q, kp, vp, pt, length)
+    want = ref.paged_decode_attention_ref(q, kp, vp, pt, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------
 
@@ -179,6 +256,44 @@ def test_model_with_pallas_attention_matches_xla():
         lx, cx = m_x.decode_step(p, cx, {"tokens": t}, pos)
         lp, cp = m_p.decode_step(p, cp, {"tokens": t}, pos)
         np.testing.assert_allclose(np.asarray(lp), np.asarray(lx), atol=2e-4)
+
+
+def test_model_paged_pallas_decode_matches_xla():
+    """decode_step_paged with attn_impl='pallas' (the paged flash-decoding
+    kernel, scalar-prefetched page table, inside jit + layer scan) must
+    match the XLA gather path."""
+    m_x = get_smoke_model("qwen3-14b", n_layers=2, head_dim=32)
+    m_p = get_smoke_model("qwen3-14b", n_layers=2, head_dim=32,
+                          attn_impl="pallas")
+    p = m_x.init_params(jax.random.PRNGKey(0))
+    B, S, ps, NB = 2, 16, 8, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              m_x.cfg.vocab_size)
+    cache = m_x.make_cache(B, NB * ps)
+    logits, cache = m_x.prefill(p, {"tokens": toks}, cache)
+    # scatter the prefilled dense cache into per-sequence pages (1..B*NB)
+    pt = (np.arange(B * NB) + 1).reshape(B, NB).astype(np.int32)
+
+    def scatter(arena, dense):
+        arena = np.array(arena)
+        dense = np.asarray(dense)
+        L = dense.shape[0]
+        blk = dense.reshape((L, B, NB, ps) + dense.shape[3:])
+        for b in range(B):
+            for j in range(NB):
+                arena[:, pt[b, j]] = blk[:, b, j]
+        return jnp.asarray(arena)
+
+    ax = jax.tree.map(scatter, m_x.make_paged_cache(1 + B * NB, ps), cache)
+    ap = jax.tree.map(lambda t: t, ax)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    posv = jnp.full((B,), S, jnp.int32)
+    for _ in range(3):
+        lx, ax = m_x.decode_step_paged(p, ax, {"tokens": tok}, posv, pt, ps)
+        lp, ap = m_p.decode_step_paged(p, ap, {"tokens": tok}, posv, pt, ps)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lx), atol=2e-4)
+        tok = jnp.argmax(lx, axis=-1).astype(jnp.int32)[:, None]
+        posv = posv + 1
 
 
 def test_ops_fallback_on_odd_shapes():

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.prewarm import (ExecutableCache, ProcessPool, Worker,
+from repro.core.prewarm import (ExecutableCache, ProcessPool,
                                 prewarm_function)
 from repro.data.pipeline import make_prompts
 from repro.models.registry import get_smoke_model

@@ -18,7 +18,8 @@ from repro.models.registry import get_smoke_model
 from repro.runtime.continuous import ContinuousBatchingEngine
 from repro.runtime.engine import Engine
 from repro.runtime.faas import FaaSRuntime, measure_service_times
-from repro.runtime.kv_pool import KVCachePool
+from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
+                                   PoolExhausted)
 from repro.utils import path_str
 
 MAX_LEN = 24
@@ -72,6 +73,119 @@ def test_kv_pool_slot_accounting():
     assert pool.alloc() == a
 
 
+def test_kv_pool_release_after_realloc():
+    """Regression for the free-set tracking: a slot that was released and
+    re-allocated must release cleanly again, and double-release must still
+    raise regardless of interleaving."""
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    pool = KVCachePool(m, n_slots=4, max_len=4)
+    slots = [pool.alloc() for _ in range(4)]
+    for s in slots:
+        pool.release(s)
+    again = pool.alloc()
+    pool.release(again)
+    with pytest.raises(ValueError):
+        pool.release(again)
+    assert pool.n_free == 4
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCachePool (block allocator)
+# ---------------------------------------------------------------------------
+
+def _paged_pool(n_slots=3, max_len=24, page_size=8, n_pages=None, arch="smollm-135m"):
+    m = get_smoke_model(arch, n_layers=1)
+    return PagedKVCachePool(m, n_slots=n_slots, max_len=max_len,
+                            page_size=page_size, n_pages=n_pages)
+
+
+def test_paged_pool_rejects_recurrent_families():
+    m = get_smoke_model("xlstm-1.3b")
+    with pytest.raises(ValueError, match="paged"):
+        PagedKVCachePool(m, n_slots=2, max_len=16)
+
+
+def test_paged_pool_exhaustion_raises_instead_of_hanging():
+    """Admission pressure must surface as PoolExhausted, never a free-list
+    wait: no free slot, or not enough unreserved pages."""
+    pool = _paged_pool(n_slots=2, max_len=24, page_size=8, n_pages=5)
+    a = pool.alloc(prompt_len=8, max_new_tokens=8)       # reserves 2 of 4
+    assert not pool.can_admit(24)                        # 3 > 2 available
+    with pytest.raises(PoolExhausted):
+        pool.alloc(prompt_len=16, max_new_tokens=8)
+    b = pool.alloc(prompt_len=8, max_new_tokens=8)       # exactly fits
+    with pytest.raises(PoolExhausted):                   # no slot either
+        pool.alloc(prompt_len=1, max_new_tokens=1)
+    pool.release(b)
+    pool.release(a)
+    # a request wider than a slot's page table can never be admitted...
+    with pytest.raises(ValueError, match="page table"):
+        pool.alloc(prompt_len=32, max_new_tokens=9)
+    # ...nor one that fits a page table but not this (undersized) arena
+    tiny = _paged_pool(n_slots=2, max_len=24, page_size=8, n_pages=3)
+    with pytest.raises(ValueError, match="allocatable"):
+        tiny.alloc(prompt_len=17, max_new_tokens=7)
+
+
+def test_paged_pool_free_list_reuse_after_retirement():
+    pool = _paged_pool(n_slots=2, max_len=24, page_size=8, n_pages=7)
+    a = pool.alloc(prompt_len=17, max_new_tokens=7)      # 3 blocks
+    pool.ensure_len(a, 17)
+    used = set(pool.page_table[a, :3].tolist())
+    assert pool.NULL_PAGE not in used and len(used) == 3
+    pool.release(a)
+    assert pool.n_free_pages == 6 and pool.n_available_pages == 6
+    b = pool.alloc(prompt_len=24, max_new_tokens=0)
+    pool.ensure_len(b, 24)
+    assert set(pool.page_table[b, :3].tolist()) <= used | {4, 5, 6}
+    assert pool.n_available_pages == 3
+
+
+def test_paged_pool_fragmentation_mixed_lengths():
+    """Fixed-size pages can't fragment: after any interleaving of
+    mixed-length allocs and frees, every page is recovered and a
+    full-arena request still fits."""
+    pool = _paged_pool(n_slots=4, max_len=32, page_size=8, n_pages=13)
+    rng = np.random.default_rng(0)
+    live = {}
+    for it in range(50):
+        if live and (len(live) == 4 or rng.random() < 0.5):
+            slot = live.pop(rng.choice(list(live)))
+            pool.release(slot)
+        else:
+            n_tok = int(rng.integers(1, 33))
+            if pool.can_admit(n_tok):
+                slot = pool.alloc(n_tok, 0)
+                pool.ensure_len(slot, n_tok)
+                live[f"r{it}"] = slot
+    for slot in live.values():
+        pool.release(slot)
+    assert pool.n_free_pages == 12 and pool.n_available_pages == 12
+    # no leak: one request can still claim every allocatable page
+    s = pool.alloc(prompt_len=32, max_new_tokens=0)      # 4 blocks
+    pool.ensure_len(s, 32)
+    assert len(set(pool.page_table[s, :4].tolist())) == 4
+
+
+def test_paged_pool_write_read_roundtrip():
+    """write_prompt -> read_slot must reproduce the dense sub-cache's
+    occupied prefix for both GQA and MLA cache layouts."""
+    for arch in ("smollm-135m", "deepseek-v3-671b"):
+        m = get_smoke_model(arch, n_layers=2)
+        pool = PagedKVCachePool(m, n_slots=2, max_len=16, page_size=4)
+        n_tok = 10
+        sub = jax.tree.map(
+            lambda t: jnp.arange(t.size, dtype=t.dtype).reshape(t.shape),
+            m.make_cache(1, pool.padded_len))
+        slot = pool.alloc(n_tok, 4)
+        pool.write_prompt(slot, sub, n_tok)
+        got = pool.read_slot(slot, n_tok)
+        nb = pool.blocks_for(n_tok) * pool.page_size
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(sub)):
+            np.testing.assert_array_equal(np.asarray(a),
+                                          np.asarray(b[:, :, :nb]))
+
+
 # ---------------------------------------------------------------------------
 # ContinuousBatchingEngine vs sequential Engine
 # ---------------------------------------------------------------------------
@@ -105,6 +219,68 @@ def test_continuous_matches_sequential_other_families(arch):
     out = cbe.run()
     for rid, w in zip(rids, want):
         np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "phi3.5-moe-42b-a6.6b",
+                                  "deepseek-v3-671b"])
+def test_paged_engine_matches_sequential_per_family(arch):
+    """The paged pool (page tables + incremental page mapping) must keep
+    greedy output bit-identical to the sequential dense Engine for every
+    attention family: dense (GQA), moe, and MLA latent caches."""
+    m = get_smoke_model(arch, n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(2))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=13)
+    want = _sequential_tokens(m, params, reqs)
+    cbe = ContinuousBatchingEngine(m, params, n_slots=2, max_len=MAX_LEN,
+                                   page_size=8)
+    assert cbe.paged and isinstance(cbe.pool, PagedKVCachePool)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+def test_paged_engine_under_page_pressure():
+    """An arena far smaller than n_slots*max_len (the dense footprint)
+    still drains a mixed workload bit-identically: admission defers on
+    page pressure and retirement's freed pages unblock it."""
+    m = get_smoke_model("smollm-135m", n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=21)
+    want = _sequential_tokens(m, params, reqs)
+    # 6 allocatable pages of 8 = 48 token slots, vs dense 3*24 = 72
+    cbe = ContinuousBatchingEngine(m, params, n_slots=3, max_len=MAX_LEN,
+                                   page_size=8, n_pages=7)
+    assert cbe.pool.nbytes() < KVCachePool(m, 3, MAX_LEN).nbytes()
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+def test_paged_engine_rejects_unservable_request():
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    cbe = ContinuousBatchingEngine(m, m.init_params(jax.random.PRNGKey(0)),
+                                   n_slots=2, max_len=32, page_size=8,
+                                   n_pages=3)
+    with pytest.raises(ValueError, match="pages"):
+        cbe.submit(np.zeros(20, np.int32), max_new_tokens=4)  # needs 3 > 2
+
+
+def test_paged_default_tracks_family():
+    """Attention families page by default; recurrent-state families keep
+    the dense slot pool (constant-size state), opt-out works."""
+    dense = get_smoke_model("smollm-135m", n_layers=1)
+    ssm = get_smoke_model("zamba2-2.7b")
+    p = dense.init_params(jax.random.PRNGKey(0))
+    assert ContinuousBatchingEngine(dense, p, n_slots=1, max_len=8).paged
+    assert not ContinuousBatchingEngine(
+        dense, p, n_slots=1, max_len=8, paged=False).paged
+    assert not ContinuousBatchingEngine(
+        ssm, ssm.init_params(jax.random.PRNGKey(0)), n_slots=1,
+        max_len=8).paged
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(ssm, None, n_slots=1, max_len=8, paged=True)
 
 
 def test_continuous_rejects_oversized_and_encdec():

@@ -4,20 +4,19 @@ locality, elastic scaling, straggler hedging."""
 import numpy as np
 import pytest
 
-from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 from repro.core.scheduler import (ClusterSim, FunctionProfile, SchedulerConfig,
                                   SimRequest, make_trace, summarize)
-from repro.hw import A6000_PCIE4 as HW
 
 
 @pytest.fixture(scope="module")
 def profiles():
     plan = plan_for("llama3-8b", 1, 1024)
-    mk = lambda name, dyn: FunctionProfile(
-        name=name, plan_for_len=lambda L: plan_for("llama3-8b", 1, L),
-        dynamic_bytes=int(plan.total_weight_bytes * 0.01) if dyn else 0,
-        template_bytes=0, model_bytes=plan.total_weight_bytes)
+    def mk(name, dyn):
+        return FunctionProfile(
+            name=name, plan_for_len=lambda L: plan_for("llama3-8b", 1, L),
+            dynamic_bytes=int(plan.total_weight_bytes * 0.01) if dyn else 0,
+            template_bytes=0, model_bytes=plan.total_weight_bytes)
     return {"static": mk("static", False), "dyn": mk("dyn", True)}
 
 

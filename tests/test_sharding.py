@@ -7,7 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd
-from repro.models.registry import SHAPES, get_model, get_smoke_model
+from repro.models.registry import SHAPES, get_model
 
 
 class FakeMesh:
@@ -75,7 +75,6 @@ def test_fsdp_adds_data_axis_sharding():
     model = get_model("qwen2.5-32b")
     no = shd.param_specs(model, MESH1, fsdp=False)
     yes = shd.param_specs(model, MESH1, fsdp=True)
-    w = "blocks", "mlp", "w_gate"
     assert "data" not in [a for a in no["blocks"]["mlp"]["w_gate"] if a]
     flat = [a for a in yes["blocks"]["mlp"]["w_gate"] if a is not None]
     assert any("data" in (a if isinstance(a, tuple) else (a,)) for a in flat)

@@ -11,7 +11,7 @@ import pytest
 from repro.core import api as tidal
 from repro.core.forking import DonationGuard, copy_for_write, safe_jit
 from repro.core.streaming import (ForkSession, StreamEntry, WeightStreamer,
-                                  streamed_prefill, supports_streamed_prefill)
+                                  streamed_prefill)
 from repro.core.template_server import TemplateServer
 from repro.data.pipeline import make_prompts
 from repro.models.registry import get_smoke_model

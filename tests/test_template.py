@@ -1,12 +1,11 @@
 """Template generation, Eq. 1 sizing, merging plans — incl. property tests."""
 
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import costmodel
 from repro.core.merging import MergedHostBuffer, plan_groups, validate_plan
-from repro.core.template import FunctionTemplate, generate_template
+from repro.core.template import generate_template
 from repro.core.tracing import AccessTrace
 from repro.hw import A6000_PCIE4, TPU_V5E
 

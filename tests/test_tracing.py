@@ -1,9 +1,7 @@
 """Weight-centric tracing tests (TIDAL §4.1): access order, coverage,
 per-layer granularity, the tied-embedding pathology, kernel dedup."""
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.tracing import (coverage, trace_weight_access, weight_sizes)

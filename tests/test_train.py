@@ -12,9 +12,8 @@ from repro.data.pipeline import DataConfig, TokenStream
 from repro.models.registry import get_smoke_model
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import (OptimizerConfig, adamw_update,
-                                   global_norm, init_opt_state)
-from repro.train.train_loop import (TrainLoopConfig, init_train_state,
-                                    make_train_step, train)
+                                   init_opt_state)
+from repro.train.train_loop import TrainLoopConfig, train
 
 
 def test_adamw_decreases_quadratic():
@@ -70,7 +69,7 @@ def test_data_stream_deterministic_resume():
     cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2, seed=3)
     s1 = TokenStream(cfg)
     it1 = iter(s1)
-    first = [next(it1) for _ in range(3)]
+    _ = [next(it1) for _ in range(3)]   # advance before snapshotting
     saved = s1.state()
     a = next(it1)
     s2 = TokenStream(cfg)
