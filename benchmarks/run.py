@@ -26,11 +26,11 @@ def main() -> None:
     failures = []
     for name in MODULES:
         print(f"\n==== {name} ====")
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod = importlib.import_module(name)
             mod.main()
-            print(f"# {name} done in {time.time() - t0:.1f}s")
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s")
         except Exception:
             traceback.print_exc()
             failures.append(name)

@@ -35,6 +35,7 @@ from repro.utils import path_str
 class StreamEntry:
     key: tuple                        # (path, idx)
     fetch: Callable[[], np.ndarray]   # host-pool slice provider
+    sharding: Optional[object] = None  # NamedSharding target (None = default)
 
 
 class WeightStreamer:
@@ -60,7 +61,13 @@ class WeightStreamer:
     def _run(self):
         try:
             for e in self.entries:
-                arr = jnp.asarray(e.fetch())
+                # with a sharding the upload IS the placement: each slice
+                # lands directly in its NamedSharding device buffers (the
+                # tensor-parallel fork never materializes a replica)
+                if e.sharding is not None:
+                    arr = jax.device_put(e.fetch(), e.sharding)
+                else:
+                    arr = jnp.asarray(e.fetch())
                 self._arrays[e.key] = arr
                 if self.completed_order is not None:
                     self.completed_order.append(e.key)

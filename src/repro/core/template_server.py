@@ -25,15 +25,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.api import LLMFunction
 from repro.core.fingerprint import TracedArray
 from repro.core.streaming import ForkSession, StreamEntry, WeightStreamer
 from repro.core.template import FunctionTemplate, generate_template
+from repro.distributed.sharding import ShardingPlan
 from repro.core.tracing import trace_weight_access, weight_sizes
 from repro.hw import HardwareProfile, TPU_V5E
 from repro.utils import path_str
@@ -51,17 +54,58 @@ class ForkStats:
 class TemplateServer:
     def __init__(self, hw: HardwareProfile = TPU_V5E,
                  device_budget_bytes: int = 1 << 62,
-                 trace_batch: int = 1, trace_seq: int = 64):
+                 trace_batch: int = 1, trace_seq: int = 64,
+                 plan: Optional[ShardingPlan] = None):
         self.hw = hw
         self.device_budget = device_budget_bytes
         self.trace_batch = trace_batch
         self.trace_seq = trace_seq
+        # default placement plan for resident buffers and forks; fork(...)
+        # can override per call (multi-instance runtimes fork one function
+        # onto different mesh slices)
+        self.plan = plan
         self.templates: dict[str, FunctionTemplate] = {}
         self.host_pool: dict[str, dict] = {}          # fn -> path -> np array
         self.device_cache: dict[str, dict] = {}       # fn -> path -> jax.Array
         self._leaf_order: dict[str, list] = {}        # fn -> [path,...]
         self._leaf_kinds: dict[str, dict] = {}        # fn -> path -> kind
+        self._leaf_specs: dict[tuple, dict] = {}      # (fn, mesh) -> path -> P
+        self._placed_resident: dict[tuple, dict] = {}  # (fn, mesh) -> buffers
         self._functions: dict[str, LLMFunction] = {}
+
+    def _specs_for(self, fn_name: str, plan: Optional[ShardingPlan]):
+        """{path -> PartitionSpec} of the function's params under ``plan``
+        (pure shape arithmetic, cached per (function, mesh) — Mesh is
+        hashable, so a recreated mesh of the same devices/axes hits)."""
+        if plan is None:
+            return None
+        key = (fn_name, plan.mesh)
+        if key not in self._leaf_specs:
+            model = self._functions[fn_name].model
+            self._leaf_specs[key] = plan.leaf_param_specs(model)
+        return self._leaf_specs[key]
+
+    def _resident_for(self, fn_name: str, plan: Optional[ShardingPlan],
+                      specs: Optional[dict]) -> dict:
+        """The resident prefix as shared device buffers for ``plan``.
+
+        Placement onto a non-default mesh slice happens ONCE per
+        (function, mesh) and is cached — every later fork onto that slice
+        reuses the same sharded buffers (invalidated whenever residency
+        changes)."""
+        base = self.device_cache.get(fn_name, {})
+        if specs is None:
+            return dict(base)
+        key = (fn_name, plan.mesh)
+        if key not in self._placed_resident:
+            self._placed_resident[key] = {
+                path: jax.device_put(a, plan.named(specs[path]))
+                for path, a in base.items()}
+        return dict(self._placed_resident[key])
+
+    def _invalidate_placements(self, fn_name: str) -> None:
+        for key in [k for k in self._placed_resident if k[0] == fn_name]:
+            del self._placed_resident[key]
 
     # ------------------------------------------------------------------
     def device_bytes_used(self) -> int:
@@ -134,25 +178,45 @@ class TemplateServer:
         pool = self.host_pool[fn_name]
         want = self._resident_leaves(fn_name)
         cache = self.device_cache.setdefault(fn_name, {})
+        specs = self._specs_for(fn_name, self.plan)
+        changed = False
         for path in list(cache):
             if path not in want:
                 del cache[path]
+                changed = True
         for path in want:
             if path not in cache:
-                cache[path] = jnp.asarray(pool[path])
+                if specs is not None:
+                    cache[path] = jax.device_put(
+                        pool[path], self.plan.named(specs[path]))
+                else:
+                    cache[path] = jnp.asarray(pool[path])
+                changed = True
+        if changed:
+            self._invalidate_placements(fn_name)
 
     def set_resident_bytes(self, fn_name: str, nbytes: int) -> None:
         self.templates[fn_name].resident_bytes = int(nbytes)
         self._refresh_residency(fn_name)
 
     # ------------------------------------------------------------------
-    def fork(self, fn_name: str, event: dict) -> tuple[ForkSession, ForkStats]:
-        """Adaptive state forking for one invocation."""
+    def fork(self, fn_name: str, event: dict,
+             plan: Optional[ShardingPlan] = None
+             ) -> tuple[ForkSession, ForkStats]:
+        """Adaptive state forking for one invocation.
+
+        With a ``plan`` (per call, or the server default) every weight is
+        placed tensor-parallel on the plan's mesh: resident buffers are
+        shared (re-placed once if the fork targets a different mesh slice),
+        dynamic replays upload sharded, and the access-order stream lands
+        each slice directly in its NamedSharding device buffers."""
         t0 = time.perf_counter()
+        plan = plan or self.plan
         fn = self._functions[fn_name]
         template = self.templates[fn_name]
         pool = self.host_pool[fn_name]
         kinds = self._leaf_kinds[fn_name]
+        specs = self._specs_for(fn_name, plan)
 
         traced, fps = fn.run_initializer(event)
         new_dyn = template.observe_init(fps)
@@ -161,21 +225,36 @@ class TemplateServer:
             for path in new_dyn:
                 pool.pop(path, None)
                 self.device_cache.get(fn_name, {}).pop(path, None)
+            self._invalidate_placements(fn_name)
 
         traced_by_path = {path_str(p): l
                           for p, l in jax.tree_util.tree_leaves_with_path(
                               traced, is_leaf=lambda x: isinstance(x, TracedArray))}
 
         stats = ForkStats(new_dynamic=tuple(sorted(new_dyn)))
-        resident = dict(self.device_cache.get(fn_name, {}))
+        # shared sharded buffers, placed once per (function, mesh slice)
+        # and reused by every later fork there.  nbytes stays the GLOBAL
+        # size, so the byte accounting matches a single-device fork.
+        resident = self._resident_for(fn_name, plan, specs)
         stats.reused_bytes = sum(int(a.nbytes) for a in resident.values())
 
         # dynamic weights: replay the DFG now (request-specific work)
         dynamic: dict = {}
         for path in sorted(template.dynamic):
             arr = traced_by_path[path].materialize()
-            dynamic[path] = jnp.asarray(arr)
+            if specs is not None:
+                dynamic[path] = jax.device_put(arr, plan.named(specs[path]))
+            else:
+                dynamic[path] = jnp.asarray(arr)
             stats.dynamic_bytes += arr.nbytes
+
+        def _shard_for(path: str, sliced: bool):
+            if specs is None:
+                return None
+            spec = specs[path]
+            # a layer slice of a stacked leaf drops the (never-sharded)
+            # leading scan-axis entry of the spec
+            return plan.named(P(*spec[1:]) if sliced else spec)
 
         # remaining static weights: stream in traced access order
         entries = []
@@ -188,13 +267,15 @@ class TemplateServer:
                 if idx != ():
                     continue
                 src = pool[path]
-                entries.append(StreamEntry(key=key, fetch=lambda s=src: s))
+                entries.append(StreamEntry(key=key, fetch=lambda s=src: s,
+                                           sharding=_shard_for(path, False)))
                 stats.streamed_bytes += src.nbytes
             else:
                 layer = idx[0]
                 src = pool[path]
                 entries.append(StreamEntry(
-                    key=key, fetch=lambda s=src, l=layer: s[l]))
+                    key=key, fetch=lambda s=src, l=layer: s[l],
+                    sharding=_shard_for(path, True)))
                 stats.streamed_bytes += src[layer].nbytes
 
         streamer = WeightStreamer(entries, resident, dynamic).start()

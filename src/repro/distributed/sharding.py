@@ -52,6 +52,49 @@ class ShardingPlan:
     def named(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
 
+    # ---- serving-runtime API ---------------------------------------------
+    # The serving stack (TemplateServer -> WeightStreamer -> KV pools ->
+    # ContinuousBatchingEngine / FaaSRuntime) threads one plan end to end:
+    # params stream into NamedSharding-placed buffers, cache arenas are
+    # allocated sharded, and the jit'd serve entry points carry these
+    # shardings in/out so GSPMD partitions prefill and decode.
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def param_shardings(self, model):
+        """NamedSharding pytree matching ``model.init_params``."""
+        return to_named(param_specs(model, self.mesh, fsdp=self.fsdp),
+                        self.mesh)
+
+    def leaf_param_specs(self, model) -> dict:
+        """{path -> PartitionSpec} for every param leaf.  The template
+        server uses this to place resident / streamed / dynamic weights;
+        a per-layer slice of a stacked leaf drops the leading spec entry
+        (the scan axis is never sharded)."""
+        specs = param_specs(model, self.mesh, fsdp=self.fsdp)
+        return {path_str(p): s for p, s in
+                jax.tree_util.tree_leaves_with_path(
+                    specs, is_leaf=lambda x: isinstance(x, P))}
+
+    def cache_shardings(self, model, cache_tree):
+        """Dense slot-pool / transient prefill caches ([L, B, T, ...])."""
+        b = next(iter(jax.tree.leaves(cache_tree))).shape[1]
+        return to_named(cache_specs(model, cache_tree, self.mesh, batch=b),
+                        self.mesh)
+
+    def paged_cache_shardings(self, model, cache_tree):
+        """Block-paged KV arenas ([L, n_pages, page_size, ...])."""
+        del model
+        return to_named(paged_cache_specs(cache_tree, self.mesh), self.mesh)
+
+
+def serving_plan(mesh: Mesh) -> ShardingPlan:
+    """Tensor-parallel serving plan: TP over 'model', no FSDP (serving
+    replicas hold full shards; ZeRO-style gathers would serialize decode)."""
+    return ShardingPlan(mesh=mesh, fsdp=False)
+
 
 def _choose_param_spec(path: str, shape: tuple, mesh: Mesh, cfg: ModelConfig,
                        fsdp: bool, stacked: bool) -> P:
@@ -255,6 +298,27 @@ def cache_specs(model, cache_tree, mesh: Mesh, batch: int,
         return P(*[assign.get(d) for d in range(ndim)])
 
     return jax.tree_util.tree_map_with_path(choose, cache_tree)
+
+
+def paged_cache_specs(cache_tree, mesh: Mesh):
+    """Block-paged KV arenas.  Leaves are ``[L, n_pages, page_size, ...]``:
+    the layer stack, page and in-page axes stay REPLICATED (any device must
+    be able to read any sequence's pages — the page table is host state,
+    not a sharded array), and the head/feature dims go to 'model' — heads
+    first, falling back to head_dim / latent rank when the head count does
+    not divide the axis."""
+    model_n = mesh.shape["model"]
+
+    def choose(leaf):
+        shape = tuple(leaf.shape)
+        assign: dict[int, object] = {}
+        for d in range(3, len(shape)):
+            if shape[d] % model_n == 0 and shape[d] >= model_n:
+                assign[d] = "model"
+                break
+        return P(*[assign.get(d) for d in range(len(shape))])
+
+    return jax.tree.map(choose, cache_tree)
 
 
 def to_named(tree, mesh: Mesh):

@@ -197,14 +197,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     if mesh is None:
         mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(mesh.devices.shape))
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         jitted, args, arg_specs, meta = build_cell(arch, shape_name, mesh,
                                                    overrides=overrides)
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     # --- memory analysis -------------------------------------------------
     mem = {}

@@ -11,12 +11,47 @@ invocation), ``fork`` (adaptive state forking from the template, prefill
 overlapped with weight streaming) or ``warm`` (a kept-alive continuous-
 batching engine — no forking at all).  Every TTFT feeds back into the
 template's Eq. 1 residency budget.
+
+``--tp N`` serves tensor-parallel over N devices; ``--instances K`` runs
+K serving instances (one per mesh data-slice) with locality routing.  On
+a CPU host the needed devices are forced via XLA_FLAGS automatically.
 """
 
 from __future__ import annotations
 
 import argparse
 import collections
+import os
+import sys
+
+
+def _flag_value(argv: list, flag: str, default: int) -> int:
+    """Pre-argparse peek supporting both ``--flag N`` and ``--flag=N``;
+    malformed values fall through to ``default`` (argparse reports them)."""
+    for i, a in enumerate(argv):
+        try:
+            if a == flag and i + 1 < len(argv):
+                return int(argv[i + 1])
+            if a.startswith(flag + "="):
+                return int(a.split("=", 1)[1])
+        except ValueError:
+            return default
+    return default
+
+
+def _force_host_devices_from_argv() -> None:
+    """Set XLA_FLAGS before jax initializes a backend (import-time, like
+    the dry-run): --tp/--instances need tp*instances host devices."""
+    n = (_flag_value(sys.argv, "--tp", 1)
+         * _flag_value(sys.argv, "--instances", 1))
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+if __name__ == "__main__":
+    _force_host_devices_from_argv()
 
 import jax
 import numpy as np
@@ -42,13 +77,29 @@ def main():
                     help="deploy dynamic (LoRA) function variants")
     ap.add_argument("--layers", type=int, default=6,
                     help="reduced depth for live CPU execution")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree per serving instance")
+    ap.add_argument("--instances", type=int, default=1,
+                    help="serving instances (mesh data-slices)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.tp > 1 or args.instances > 1:
+        if jax.device_count() < args.tp * args.instances:
+            raise SystemExit(
+                f"need {args.tp * args.instances} devices, have "
+                f"{jax.device_count()} (run as a script so XLA_FLAGS is "
+                "forced before jax initializes)")
+        mesh = jax.make_mesh((args.instances, args.tp), ("data", "model"))
+        print(f"serving mesh: {args.instances} instance(s) x "
+              f"{args.tp}-way tensor parallel")
 
     model = get_smoke_model(args.arch, n_layers=args.layers)
     rt = FaaSRuntime(n_slots=args.slots,
                      max_len=args.prompt_len + args.max_new,
                      keep_alive_s=args.keep_alive,
-                     trace_seq=args.prompt_len)
+                     trace_seq=args.prompt_len,
+                     mesh=mesh)
 
     rng = np.random.default_rng(0)
     for i in range(args.functions):

@@ -10,8 +10,9 @@
                 for the cluster scheduler
 """
 
+from repro.distributed.sharding import ShardingPlan, serving_plan
 from repro.runtime.continuous import (ContinuousBatchingEngine, Request,
-                                      RequestOutput)
+                                      RequestOutput, sharded_serve_fns)
 from repro.runtime.engine import Engine, GenerationResult, sample_greedy
 from repro.runtime.faas import (FaaSRuntime, MeasuredServiceTimes,
                                 SubmitResult, measure_service_times)
@@ -21,6 +22,7 @@ from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
 __all__ = [
     "ContinuousBatchingEngine", "Engine", "FaaSRuntime", "GenerationResult",
     "KVCachePool", "MeasuredServiceTimes", "PagedKVCachePool",
-    "PoolExhausted", "Request", "RequestOutput", "SubmitResult",
-    "measure_service_times", "sample_greedy",
+    "PoolExhausted", "Request", "RequestOutput", "ShardingPlan",
+    "SubmitResult", "measure_service_times", "sample_greedy",
+    "serving_plan", "sharded_serve_fns",
 ]

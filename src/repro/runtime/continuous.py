@@ -38,9 +38,48 @@ import numpy as np
 
 from repro.core.streaming import (ForkSession, streamed_prefill,
                                   supports_streamed_prefill)
+from repro.distributed.sharding import ShardingPlan
 from repro.models.registry import Model
 from repro.runtime.engine import sample_greedy
 from repro.runtime.kv_pool import KVCachePool, PagedKVCachePool
+
+
+def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
+                      donate_cache: bool = True):
+    """jit'd ``(prefill_fn, decode_fn)`` serve entry points whose in/out
+    shardings carry ``plan`` end to end: params arrive in their tensor-
+    parallel layout, the pool arena keeps its placement across donated
+    decode steps, and GSPMD partitions the dense/paged attention paths.
+    Tokens / positions / page tables / logits are replicated (host-driven
+    control state)."""
+    rep = plan.replicated
+    pshard = plan.param_shardings(model)
+    paged = isinstance(pool, PagedKVCachePool)
+    prefill_len = pool.padded_len if paged else pool.max_len
+    pc_shard = plan.cache_shardings(
+        model, model.make_cache(1, prefill_len, abstract=True))
+    prefill_fn = jax.jit(
+        lambda p, inputs, cache: model.prefill(p, inputs, cache),
+        in_shardings=(pshard, rep, pc_shard),
+        out_shardings=(rep, pc_shard))
+    if paged:
+        ps = pool.page_size
+        dshard = plan.paged_cache_shardings(model, pool.cache)
+        decode_fn = jax.jit(
+            lambda p, cache, toks, pos, pt: model.decode_step_paged(
+                p, cache, {"tokens": toks}, pos, pt, ps),
+            in_shardings=(pshard, dshard, rep, rep, rep),
+            out_shardings=(rep, dshard),
+            donate_argnums=(1,) if donate_cache else ())
+    else:
+        dshard = plan.cache_shardings(model, pool.cache)
+        decode_fn = jax.jit(
+            lambda p, cache, toks, pos: model.decode_step(
+                p, cache, {"tokens": toks}, pos),
+            in_shardings=(pshard, dshard, rep, rep),
+            out_shardings=(rep, dshard),
+            donate_argnums=(1,) if donate_cache else ())
+    return prefill_fn, decode_fn
 
 
 @dataclasses.dataclass
@@ -87,44 +126,72 @@ class ContinuousBatchingEngine:
                  decode_fn: Optional[Callable] = None,
                  donate_cache: bool = True,
                  paged: Optional[bool] = None, page_size: int = 8,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 plan: Optional[ShardingPlan] = None,
+                 pool: Optional[Any] = None):
         if model.is_encdec:
             raise NotImplementedError(
                 "continuous batching needs per-slot decode positions; the "
                 "enc-dec family still serves through the sequential Engine")
         self.model = model
+        self.plan = plan
         self.session = params if isinstance(params, ForkSession) else None
         self._params = None if self.session is not None else params
-        # block-paged KV for attention families (their cache grows with the
-        # sequence), dense slots for constant-size recurrent state
-        if paged is None:
-            paged = model.supports_paged_kv
-        self.paged = paged
-        if paged:
-            self.pool: Any = PagedKVCachePool(model, n_slots, max_len,
-                                              page_size=page_size,
-                                              n_pages=n_pages)
+        if pool is not None:
+            # injected shared pool (FaaSRuntime: one arena per mesh slice,
+            # engines borrow slots and return them at retirement/eviction)
+            self.pool = pool
+            self.paged = isinstance(pool, PagedKVCachePool)
+            n_slots = pool.n_slots
+            if plan is None:
+                self.plan = plan = pool.plan
         else:
-            self.pool = KVCachePool(model, n_slots, max_len)
+            # block-paged KV for attention families (their cache grows with
+            # the sequence), dense slots for constant-size recurrent state
+            if paged is None:
+                paged = model.supports_paged_kv
+            self.paged = paged
+            if paged:
+                self.pool = PagedKVCachePool(model, n_slots, max_len,
+                                             page_size=page_size,
+                                             n_pages=n_pages, plan=plan)
+            else:
+                self.pool = KVCachePool(model, n_slots, max_len, plan=plan)
         self.queue: collections.deque = collections.deque()
         self.active: dict = {}                       # slot -> _Active
         self.results: dict = {}                      # req_id -> RequestOutput
         self._next_id = 0
-        if prefill_fn is None:
-            prefill_fn = jax.jit(
-                lambda p, inputs, cache: model.prefill(p, inputs, cache))
-        if decode_fn is None:
-            if paged:
-                decode_fn = jax.jit(
-                    lambda p, cache, toks, pos, pt: model.decode_step_paged(
-                        p, cache, {"tokens": toks}, pos, pt,
-                        self.pool.page_size),
-                    donate_argnums=(1,) if donate_cache else ())
+        if plan is not None:
+            self._param_shardings = plan.param_shardings(model)
+            prefill_len = (self.pool.padded_len if self.paged
+                           else self.pool.max_len)
+            self._prefill_cache_shardings = plan.cache_shardings(
+                model, model.make_cache(1, prefill_len, abstract=True))
+            if self._params is not None:
+                # warm params place once; forked sessions place on resolve
+                self._params = jax.device_put(self._params,
+                                              self._param_shardings)
+        if prefill_fn is None or decode_fn is None:
+            if plan is not None:
+                default_p, default_d = sharded_serve_fns(
+                    model, self.pool, plan, donate_cache=donate_cache)
             else:
-                decode_fn = jax.jit(
-                    lambda p, cache, toks, pos: model.decode_step(
-                        p, cache, {"tokens": toks}, pos),
-                    donate_argnums=(1,) if donate_cache else ())
+                default_p = jax.jit(
+                    lambda p, inputs, cache: model.prefill(p, inputs, cache))
+                if self.paged:
+                    default_d = jax.jit(
+                        lambda p, cache, toks, pos, pt:
+                        model.decode_step_paged(
+                            p, cache, {"tokens": toks}, pos, pt,
+                            self.pool.page_size),
+                        donate_argnums=(1,) if donate_cache else ())
+                else:
+                    default_d = jax.jit(
+                        lambda p, cache, toks, pos: model.decode_step(
+                            p, cache, {"tokens": toks}, pos),
+                        donate_argnums=(1,) if donate_cache else ())
+            prefill_fn = prefill_fn or default_p
+            decode_fn = decode_fn or default_d
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         # per-slot feedback state (free slots decode position 0 / token 0;
@@ -137,6 +204,11 @@ class ContinuousBatchingEngine:
         """Full params (a session blocks on its outstanding transfers)."""
         if self._params is None:
             self._params = self.session.params()
+            if self.plan is not None:
+                # leaves streamed whole already carry their NamedSharding;
+                # stacked per-layer slices get their final placement here
+                self._params = jax.device_put(self._params,
+                                              self._param_shardings)
         return self._params
 
     @property
@@ -188,6 +260,8 @@ class ContinuousBatchingEngine:
         prefill_len = (self.pool.padded_len if self.paged
                        else self.pool.max_len)
         cache = self.model.make_cache(1, prefill_len)
+        if self.plan is not None:
+            cache = jax.device_put(cache, self._prefill_cache_shardings)
         streamed = (self.session is not None and self._params is None
                     and supports_streamed_prefill(self.model))
         if streamed:
@@ -225,10 +299,30 @@ class ContinuousBatchingEngine:
             streamed_prefill=st.streamed)
 
     # ------------------------------------------------------------------
+    def _foreign_slots(self) -> int:
+        """Slots of the pool allocated by a DIFFERENT engine (shared-pool
+        runtimes lend one arena to several engines)."""
+        free = (self.pool.n_free_slots if self.paged else self.pool.n_free)
+        return (self.pool.n_slots - free) - len(self.active)
+
     def step(self) -> bool:
         """Admit what fits, run one batched decode, retire the finished.
 
         Returns False once the engine is fully drained."""
+        if self.queue or self.active:
+            # a batched decode touches EVERY slot of the arena (free slots
+            # write their dummy token at position 0), so an engine must
+            # hold the shared pool exclusively while it decodes — another
+            # engine's in-flight slot would be silently corrupted (or, with
+            # no slots to admit into, this loop would spin forever).  The
+            # FaaS runtime drains engines one at a time; anything else is
+            # a bug worth a loud error, raised before touching the pool.
+            foreign = self._foreign_slots()
+            if foreign > 0:
+                raise RuntimeError(
+                    f"shared KV pool: {foreign} slot(s) held by another "
+                    "engine; drain or evict it before decoding here "
+                    "(engines borrow the arena exclusively)")
         while self.queue and self._can_admit(self.queue[0]):
             self._admit(self.queue.popleft())
         if not self.active:
@@ -260,3 +354,18 @@ class ContinuousBatchingEngine:
         while self.step():
             pass
         return self.results
+
+    def release_all(self) -> int:
+        """Abandon in-flight work: release every active slot (returning its
+        pages to a paged pool) and drop queued requests.  The keep-alive
+        eviction path — an engine sharing a runtime-owned pool must hand
+        its slots back before it is dropped, or the arena leaks.  Returns
+        the number of abandoned requests; completed results are kept."""
+        n = len(self.active) + len(self.queue)
+        for slot in list(self.active):
+            self.active.pop(slot)
+            self.pool.release(slot)
+            self._tok[slot, 0] = 0
+            self._pos[slot] = 0
+        self.queue.clear()
+        return n

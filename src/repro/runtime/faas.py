@@ -19,6 +19,15 @@ Invocation kinds mirror the cluster scheduler's service classes:
   * ``cold`` — first invocation of the function since deploy (pays any
     lazy compilation not covered by pre-warming, then forks).
 
+Multi-device serving (TIDAL §6 on one host): with ``mesh=`` the runtime
+splits the device mesh into one serving INSTANCE per 'data' slice, each
+tensor-parallel over its slice's 'model' axis.  Every instance owns a
+sharded KV arena per model (allocated once, engines borrow slots from it)
+and its own jit'd serve entry points; new forks are placed by the same
+locality policy :class:`~repro.core.scheduler.ClusterSim` simulates —
+prefer the instance already warm for the function unless its load exceeds
+the least-loaded instance by more than ``locality_max_extra_load``.
+
 :func:`measure_service_times` turns those wall-clock measurements into a
 :class:`MeasuredServiceTimes` oracle the cluster scheduler can consume via
 ``SchedulerConfig.measured`` — closing the sim-vs-real loop.
@@ -33,13 +42,17 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import api as tidal
 from repro.core.api import LLMFunction
 from repro.core.prewarm import ExecutableCache, ProcessPool
 from repro.core.template_server import ForkStats, TemplateServer
+from repro.distributed.sharding import ShardingPlan, serving_plan
 from repro.models.registry import get_smoke_model
-from repro.runtime.continuous import ContinuousBatchingEngine
+from repro.runtime.continuous import (ContinuousBatchingEngine,
+                                      sharded_serve_fns)
+from repro.runtime.kv_pool import KVCachePool, PagedKVCachePool
 
 KINDS = ("warm", "fork", "cold")
 
@@ -64,6 +77,14 @@ def _engine_key(fn_name: str, event: dict) -> tuple:
 class _WarmEngine:
     engine: ContinuousBatchingEngine
     last_used_s: float
+    instance: int = 0
+
+
+@dataclasses.dataclass
+class _Instance:
+    """One serving instance: a mesh slice (or the single default device)."""
+    idx: int
+    plan: Optional[ShardingPlan]
 
 
 class FaaSRuntime:
@@ -73,9 +94,15 @@ class FaaSRuntime:
                  n_slots: int = 4, max_len: int = 64,
                  keep_alive_s: float = 60.0, max_warm_engines: int = 8,
                  prewarm: bool = True, pool_workers: int = 2,
-                 trace_seq: int = 32, page_size: int = 8):
+                 trace_seq: int = 32, page_size: int = 8,
+                 mesh: Optional[Mesh] = None,
+                 locality_max_extra_load: int = 2):
+        self.mesh = mesh
+        self.locality_max_extra_load = locality_max_extra_load
+        self.instances = self._make_instances(mesh)
         self.server = server or TemplateServer(trace_batch=1,
-                                               trace_seq=trace_seq)
+                                               trace_seq=trace_seq,
+                                               plan=self.instances[0].plan)
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
@@ -88,29 +115,82 @@ class FaaSRuntime:
         self._engines: dict[tuple, _WarmEngine] = {}
         self._fn_keys: dict[str, list] = {}
         self._invoked: set = set()
-        # jit'd serve entry points shared across every engine of a model:
-        # a fresh fork reuses the executables earlier engines compiled
-        # (the §5.1 dedup story at the engine level)
-        self._serve_fns: dict[int, tuple] = {}
+        # jit'd serve entry points shared across every engine of a model on
+        # one instance: a fresh fork reuses the executables earlier engines
+        # compiled (the §5.1 dedup story at the engine level)
+        self._serve_fns: dict[tuple, tuple] = {}
+        # one KV arena per (instance, model): allocated once — sharded on
+        # the instance's mesh slice — and lent to engines slot by slot;
+        # eviction returns every borrowed slot/page (see ``evict``)
+        self._pools: dict[tuple, object] = {}
 
-    def _serve_fns_for(self, fn_name: str) -> tuple:
-        model = self.functions[fn_name].model
-        key = id(model)
-        if key not in self._serve_fns:
-            prefill = jax.jit(
-                lambda p, i, c, m=model: m.prefill(p, i, c))
+    @staticmethod
+    def _make_instances(mesh: Optional[Mesh]) -> list:
+        if mesh is None:
+            return [_Instance(0, None)]
+        if tuple(mesh.axis_names) != ("data", "model"):
+            raise ValueError(
+                "serving mesh must have axes ('data', 'model'): one "
+                "instance per data slice, tensor-parallel over model "
+                f"(got {mesh.axis_names})")
+        out = []
+        for i in range(mesh.shape["data"]):
+            sub = Mesh(mesh.devices[i:i + 1], mesh.axis_names)
+            out.append(_Instance(i, serving_plan(sub)))
+        return out
+
+    # ------------------------------------------------------------------
+    def _pool_for(self, inst: _Instance, model) -> object:
+        key = (inst.idx, id(model))
+        if key not in self._pools:
             if model.supports_paged_kv:
-                # attention families decode against the block-paged arena
-                decode = jax.jit(
-                    lambda p, c, t, pos, pt, m=model: m.decode_step_paged(
-                        p, c, {"tokens": t}, pos, pt, self.page_size),
-                    donate_argnums=(1,))
+                self._pools[key] = PagedKVCachePool(
+                    model, self.n_slots, self.max_len,
+                    page_size=self.page_size, plan=inst.plan)
             else:
-                decode = jax.jit(
-                    lambda p, c, t, pos, m=model: m.decode_step(
-                        p, c, {"tokens": t}, pos),
-                    donate_argnums=(1,))
-            self._serve_fns[key] = (prefill, decode)
+                self._pools[key] = KVCachePool(model, self.n_slots,
+                                               self.max_len, plan=inst.plan)
+        return self._pools[key]
+
+    def kv_pool_stats(self) -> dict:
+        """{(instance, model-key): free-slot/page counts} — the invariant
+        surface for eviction tests: after every engine drains or is
+        evicted, all counts are back at their initial values."""
+        out = {}
+        for key, pool in self._pools.items():
+            if isinstance(pool, PagedKVCachePool):
+                out[key] = {"n_free_slots": pool.n_free_slots,
+                            "n_free_pages": pool.n_free_pages,
+                            "n_available_pages": pool.n_available_pages}
+            else:
+                out[key] = {"n_free_slots": pool.n_free}
+        return out
+
+    def _serve_fns_for(self, fn_name: str,
+                       inst: Optional[_Instance] = None) -> tuple:
+        inst = inst or self.instances[0]
+        model = self.functions[fn_name].model
+        key = (id(model), inst.idx)
+        if key not in self._serve_fns:
+            if inst.plan is not None:
+                pool = self._pool_for(inst, model)
+                self._serve_fns[key] = sharded_serve_fns(model, pool,
+                                                         inst.plan)
+            else:
+                prefill = jax.jit(
+                    lambda p, i, c, m=model: m.prefill(p, i, c))
+                if model.supports_paged_kv:
+                    # attention families decode against the paged arena
+                    decode = jax.jit(
+                        lambda p, c, t, pos, pt, m=model: m.decode_step_paged(
+                            p, c, {"tokens": t}, pos, pt, self.page_size),
+                        donate_argnums=(1,))
+                else:
+                    decode = jax.jit(
+                        lambda p, c, t, pos, m=model: m.decode_step(
+                            p, c, {"tokens": t}, pos),
+                        donate_argnums=(1,))
+                self._serve_fns[key] = (prefill, decode)
         return self._serve_fns[key]
 
     # ------------------------------------------------------------------
@@ -132,66 +212,119 @@ class FaaSRuntime:
     def _prewarm_engine_fns(self, fn: LLMFunction, seq: int) -> list:
         """Populate the jit caches of this model's shared serve fns by
         running them once on zero-filled inputs, accounting the compiles
-        in the ExecutableCache (dedup'd across functions of one model)."""
+        in the ExecutableCache (dedup'd across functions of one model,
+        per serving instance — each mesh slice has its own executables)."""
         model = fn.model
-        prefill_fn, decode_fn = self._serve_fns_for(fn.name)
-        kp = (id(model), "prefill", 1, seq, self.max_len)
-        kd = (id(model), "decode-pool", self.n_slots, self.max_len)
         paged = model.supports_paged_kv
         # shape bookkeeping mirrors PagedKVCachePool's defaults so the
         # pre-warmed executables are exactly the ones engines will call
         bps = -(-self.max_len // self.page_size)
         prefill_len = bps * self.page_size if paged else self.max_len
+        keys = []
 
-        def warm_prefill():
+        def zero_params(plan):
             params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                   model.init_params(abstract=True))
-            inputs = {"tokens": jnp.zeros((1, seq), jnp.int32)}
-            jax.block_until_ready(
-                prefill_fn(params, inputs, model.make_cache(1, prefill_len)))
-            return prefill_fn
+            if plan is not None:
+                params = jax.device_put(params, plan.param_shardings(model))
+            return params
 
-        def warm_decode():
-            params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                  model.init_params(abstract=True))
-            toks = jnp.zeros((self.n_slots, 1), jnp.int32)
-            pos = jnp.zeros((self.n_slots,), jnp.int32)
-            if paged:
-                cache = model.make_paged_cache(1 + self.n_slots * bps,
-                                               self.page_size)
-                pt = jnp.zeros((self.n_slots, bps), jnp.int32)
-                jax.block_until_ready(decode_fn(params, cache, toks, pos, pt))
-            else:
-                cache = model.make_cache(self.n_slots, self.max_len)
-                jax.block_until_ready(decode_fn(params, cache, toks, pos))
-            return decode_fn
+        for inst in self.instances:
+            prefill_fn, decode_fn = self._serve_fns_for(fn.name, inst)
+            kp = (id(model), "prefill", inst.idx, 1, seq, self.max_len)
+            kd = (id(model), "decode-pool", inst.idx, self.n_slots,
+                  self.max_len)
 
-        self.exe_cache.get_or_compile(kp, warm_prefill)
-        self.exe_cache.get_or_compile(kd, warm_decode)
-        return [kp, kd]
+            def warm_prefill(inst=inst, prefill_fn=prefill_fn):
+                params = zero_params(inst.plan)
+                inputs = {"tokens": jnp.zeros((1, seq), jnp.int32)}
+                cache = model.make_cache(1, prefill_len)
+                if inst.plan is not None:
+                    cache = jax.device_put(
+                        cache, inst.plan.cache_shardings(model, cache))
+                jax.block_until_ready(prefill_fn(params, inputs, cache))
+                return prefill_fn
+
+            def warm_decode(inst=inst, decode_fn=decode_fn):
+                params = zero_params(inst.plan)
+                toks = jnp.zeros((self.n_slots, 1), jnp.int32)
+                pos = jnp.zeros((self.n_slots,), jnp.int32)
+                if paged:
+                    cache = model.make_paged_cache(1 + self.n_slots * bps,
+                                                   self.page_size)
+                    if inst.plan is not None:
+                        cache = jax.device_put(
+                            cache,
+                            inst.plan.paged_cache_shardings(model, cache))
+                    pt = jnp.zeros((self.n_slots, bps), jnp.int32)
+                    jax.block_until_ready(
+                        decode_fn(params, cache, toks, pos, pt))
+                else:
+                    cache = model.make_cache(self.n_slots, self.max_len)
+                    if inst.plan is not None:
+                        cache = jax.device_put(
+                            cache, inst.plan.cache_shardings(model, cache))
+                    jax.block_until_ready(decode_fn(params, cache, toks, pos))
+                return decode_fn
+
+            self.exe_cache.get_or_compile(kp, warm_prefill)
+            self.exe_cache.get_or_compile(kd, warm_decode)
+            keys += [kp, kd]
+        return keys
 
     # ------------------------------------------------------------------
     def warm_engines(self) -> list:
         return sorted(self._engines)
 
+    def _drop_engine(self, key: tuple) -> None:
+        """Remove one warm engine, returning every slot/page it still holds
+        to the instance's shared KV pool (the arena outlives the engine —
+        dropping without releasing would leak it)."""
+        w = self._engines.pop(key)
+        w.engine.release_all()
+
     def evict(self, fn_name: Optional[str] = None) -> int:
-        """Drop warm engines (all of ``fn_name``'s, or every one).  The next
-        invocation takes the fork path again — i.e. keep-alive expiry."""
+        """Drop warm engines (all of ``fn_name``'s, or every one), returning
+        their KV slots/pages to the shared pools.  The next invocation takes
+        the fork path again — i.e. keep-alive expiry."""
         keys = [k for k in self._engines
                 if fn_name is None or k[0] == fn_name]
         for k in keys:
-            del self._engines[k]
+            self._drop_engine(k)
         return len(keys)
 
     def _prune(self, now: float) -> None:
         for k in [k for k, w in self._engines.items()
                   if now - w.last_used_s > self.keep_alive_s]:
-            del self._engines[k]
+            self._drop_engine(k)
         while len(self._engines) > self.max_warm_engines:
             oldest = min(self._engines, key=lambda k: self._engines[k].last_used_s)
-            del self._engines[oldest]
+            self._drop_engine(oldest)
 
     # ------------------------------------------------------------------
+    def _pick_instance(self, fn_name: str) -> _Instance:
+        """Locality routing across mesh slices — the live analogue of
+        ``ClusterSim._pick_gpu``: prefer an instance already warm for this
+        function (its template executables and pool are hot) unless it is
+        more than ``locality_max_extra_load`` engines busier than the
+        least-loaded instance."""
+        if len(self.instances) == 1:
+            return self.instances[0]
+
+        def load(inst):
+            return sum(1 for w in self._engines.values()
+                       if w.instance == inst.idx)
+
+        best_any = min(self.instances, key=lambda i: (load(i), i.idx))
+        warm_idx = {w.instance for k, w in self._engines.items()
+                    if k[0] == fn_name}
+        if warm_idx:
+            cands = [i for i in self.instances if i.idx in warm_idx]
+            best_warm = min(cands, key=lambda i: (load(i), i.idx))
+            if load(best_warm) - load(best_any) <= self.locality_max_extra_load:
+                return best_warm
+        return best_any
+
     def _engine_for(self, fn_name: str, event: Optional[dict],
                     now: float) -> tuple:
         """Resolve (key, engine, kind, fork_stats) for one invocation,
@@ -204,14 +337,17 @@ class FaaSRuntime:
             self._invoked.add(fn_name)
             return key, warm.engine, "warm", None
         kind = "fork" if fn_name in self._invoked else "cold"
-        session, stats = self.server.fork(fn_name, event or {})
-        prefill_fn, decode_fn = self._serve_fns_for(fn_name)
+        inst = self._pick_instance(fn_name)
+        model = self.functions[fn_name].model
+        session, stats = self.server.fork(fn_name, event or {},
+                                          plan=inst.plan)
+        prefill_fn, decode_fn = self._serve_fns_for(fn_name, inst)
         engine = ContinuousBatchingEngine(
-            self.functions[fn_name].model, session,
-            n_slots=self.n_slots, max_len=self.max_len,
+            model, session, max_len=self.max_len,
             prefill_fn=prefill_fn, decode_fn=decode_fn,
-            page_size=self.page_size)
-        self._engines[key] = _WarmEngine(engine, now)
+            page_size=self.page_size, plan=inst.plan,
+            pool=self._pool_for(inst, model))
+        self._engines[key] = _WarmEngine(engine, now, inst.idx)
         self._invoked.add(fn_name)
         return key, engine, kind, stats
 
@@ -341,14 +477,18 @@ def measure_smoke_service_times(functions: dict, arch: str = "smollm-135m",
                                 n_layers: int = 2, n_slots: int = 2,
                                 max_len: int = 32, trace_seq: int = 16,
                                 prompt_len: int = 16, max_new_tokens: int = 4,
-                                seed: int = 0) -> MeasuredServiceTimes:
+                                seed: int = 0,
+                                mesh: Optional[Mesh] = None
+                                ) -> MeasuredServiceTimes:
     """One-stop live measurement rig shared by the ``--measured`` demos
-    (``benchmarks/fig13_ttft.py``, ``examples/faas_cluster.py``): build a
+    (``benchmarks/fig13_ttft.py``, ``examples/faas_cluster.py``,
+    ``benchmarks/fig18_distributed.py`` with a ``mesh``): build a
     smoke-scale runtime on CPU, deploy one variant per ``functions`` entry
     ({name: 'static' | 'lora'}), and measure cold/fork/warm wall-clock
     service times for each."""
     model = get_smoke_model(arch, n_layers=n_layers)
-    rt = FaaSRuntime(n_slots=n_slots, max_len=max_len, trace_seq=trace_seq)
+    rt = FaaSRuntime(n_slots=n_slots, max_len=max_len, trace_seq=trace_seq,
+                     mesh=mesh)
     params = model.init_params(jax.random.PRNGKey(seed))
     events: dict = {}
     for name, kind in functions.items():

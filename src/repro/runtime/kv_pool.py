@@ -28,11 +28,12 @@ Exhaustion raises :class:`PoolExhausted` instead of hanging admission.
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
+from repro.distributed.sharding import ShardingPlan
 from repro.models.registry import Model
 
 
@@ -41,15 +42,25 @@ class PoolExhausted(RuntimeError):
 
 
 class KVCachePool:
-    """Slot-indexed KV/state cache shared by one decode batch."""
+    """Slot-indexed KV/state cache shared by one decode batch.
 
-    def __init__(self, model: Model, n_slots: int, max_len: int):
+    With a ``plan`` the pool's arena is allocated directly as
+    NamedSharding-placed buffers on the plan's mesh (heads / feature dims
+    over 'model'), so every engine decode runs tensor-parallel without a
+    placement copy."""
+
+    def __init__(self, model: Model, n_slots: int, max_len: int,
+                 plan: Optional[ShardingPlan] = None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         self.model = model
         self.n_slots = n_slots
         self.max_len = max_len
+        self.plan = plan
         self.cache = model.make_cache(n_slots, max_len)
+        if plan is not None:
+            self.cache = jax.device_put(
+                self.cache, plan.cache_shardings(model, self.cache))
         self._free = list(range(n_slots - 1, -1, -1))
         self._free_set = set(self._free)
 
@@ -98,7 +109,8 @@ class PagedKVCachePool:
     NULL_PAGE = 0
 
     def __init__(self, model: Model, n_slots: int, max_len: int,
-                 page_size: int = 8, n_pages: int | None = None):
+                 page_size: int = 8, n_pages: int | None = None,
+                 plan: Optional[ShardingPlan] = None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if page_size < 1:
@@ -123,7 +135,13 @@ class PagedKVCachePool:
         if n_pages < 2:
             raise ValueError("n_pages must be >= 2 (null page + 1)")
         self.n_pages = n_pages
+        self.plan = plan
         self.cache = model.make_paged_cache(n_pages, page_size)
+        if plan is not None:
+            # page + in-page axes replicated (any device serves any page),
+            # heads / latent dims over 'model'
+            self.cache = jax.device_put(
+                self.cache, plan.paged_cache_shardings(model, self.cache))
         self.page_table = np.zeros((n_slots, self.blocks_per_slot), np.int32)
         self._free_slots = list(range(n_slots - 1, -1, -1))
         self._free_slot_set = set(self._free_slots)

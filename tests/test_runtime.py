@@ -456,6 +456,81 @@ def test_faas_lora_adapters_get_separate_engines(faas_runtime):
     assert a0.tokens.shape == a1.tokens.shape
 
 
+def test_faas_evict_returns_slots_and_pages_to_pool():
+    """Regression: engines borrow slots/pages from runtime-owned shared
+    pools (one arena per instance+model), so eviction must hand back
+    everything an engine still holds.  Repeated serve→evict cycles keep
+    every free count at its initial value, and evicting an engine with
+    undrained work releases its slots/pages."""
+    m = get_smoke_model("smollm-135m", n_layers=1)      # paged pool
+    s = get_smoke_model("zamba2-2.7b")                  # dense slot pool
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8)
+    rt.deploy(tidal.static_function("f-att", m,
+                                    m.init_params(jax.random.PRNGKey(0))),
+              {}, prewarm_seq=8)
+    rt.deploy(tidal.static_function("f-ssm", s,
+                                    s.init_params(jax.random.PRNGKey(0))),
+              {}, prewarm_seq=8)
+    prompt = np.arange(6, dtype=np.int32)
+    rt.submit("f-att", {}, prompt, 2)
+    rt.submit("f-ssm", {}, prompt, 2)
+    baseline = rt.kv_pool_stats()
+    assert baseline and all(st["n_free_slots"] == 2
+                            for st in baseline.values())
+    for _ in range(3):
+        rt.submit("f-att", {}, prompt, 2)
+        rt.submit("f-ssm", {}, prompt, 2)
+        assert rt.evict() == 2
+        assert rt.kv_pool_stats() == baseline           # no arena leak
+    # an engine evicted while it still HOLDS slots (admitted, not drained)
+    # must return them — this is the leak the shared arena would otherwise
+    # accumulate across keep-alive expiries
+    _, engine, _, _ = rt._engine_for("f-att", {}, time.perf_counter())
+    engine.submit(prompt, 4)
+    engine.step()                          # admit -> slot + prompt pages
+    assert rt.kv_pool_stats() != baseline
+    rt.evict("f-att")
+    assert rt.kv_pool_stats() == baseline
+
+
+def test_shared_pool_exclusive_borrowing_guard():
+    """A batched decode touches EVERY slot of the arena (free slots write
+    a dummy token at position 0), so engines sharing one pool must decode
+    one at a time: stepping while another engine holds slots raises
+    instead of silently corrupting its KV state."""
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    params = m.init_params(jax.random.PRNGKey(0))
+    pool = PagedKVCachePool(m, n_slots=2, max_len=16, page_size=8)
+    a = ContinuousBatchingEngine(m, params, pool=pool)
+    b = ContinuousBatchingEngine(m, params, pool=pool)
+    ra = a.submit(np.arange(4, dtype=np.int32), 4)
+    a.step()                               # a holds a slot mid-decode
+    rb = b.submit(np.arange(4, dtype=np.int32), 2)
+    with pytest.raises(RuntimeError, match="another"):
+        b.step()
+    out_a = a.run()                        # a drains -> slots come back
+    out_b = b.run()
+    assert out_a[ra].n_generated == 4 and out_b[rb].n_generated == 2
+    assert pool.n_free_slots == 2
+
+
+def test_faas_engines_of_one_model_share_one_pool():
+    """Two functions over the same model draw slots from ONE shared arena
+    (allocated once per instance), not one arena per engine fork."""
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8)
+    rt.deploy(tidal.static_function("f-one", m, params), {}, prewarm_seq=8)
+    rt.deploy(tidal.static_function("f-two", m, params), {}, prewarm_seq=8)
+    prompt = np.arange(6, dtype=np.int32)
+    rt.submit("f-one", {}, prompt, 2)
+    rt.submit("f-two", {}, prompt, 2)
+    assert len(rt._pools) == 1
+    e1 = rt._engines[("f-one", ())].engine
+    e2 = rt._engines[("f-two", ())].engine
+    assert e1.pool is e2.pool
+
+
 def test_cluster_sim_measured_mode():
     """ClusterSim in measured mode: warm/fork/cold service times come from
     the live runtime's wall clock, not the analytic oracle."""

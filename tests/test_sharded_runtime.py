@@ -1,0 +1,217 @@
+"""Tensor-parallel serving parity on a forced multi-device host.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+``multidevice`` job); on a single-device backend every test here skips —
+the tier-1 suite stays single-device (see tests/conftest.py).
+
+Covered invariants:
+  * every attention family (dense GQA / moe / MLA) forked onto the mesh
+    produces TOKEN-IDENTICAL greedy decode streams to the single-device
+    sequential Engine, and identical ForkStats byte accounting;
+  * weights really stream into distributed NamedSharding buffers and the
+    KV arenas are allocated sharded (not replicated);
+  * FaaSRuntime on a (data=2, model=4) mesh places engines across both
+    instances, routes warm work with locality, and eviction returns every
+    slot/page to the per-instance shared pools.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+from repro.core import api as tidal                              # noqa: E402
+from repro.core.template_server import TemplateServer            # noqa: E402
+from repro.distributed.sharding import serving_plan              # noqa: E402
+from repro.models.registry import get_smoke_model                # noqa: E402
+from repro.runtime.continuous import ContinuousBatchingEngine    # noqa: E402
+from repro.runtime.engine import Engine                          # noqa: E402
+from repro.runtime.faas import FaaSRuntime                       # noqa: E402
+
+MAX_LEN = 24
+ATTENTION_FAMILIES = ["smollm-135m", "phi3.5-moe-42b-a6.6b",
+                      "deepseek-v3-671b"]
+
+
+def _tp_plan():
+    return serving_plan(jax.make_mesh((1, 8), ("data", "model")))
+
+
+def _mixed_requests(vocab, seed=3, n=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, vocab, s).astype(np.int32), k)
+            for s, k in [(4, 5), (9, 3), (6, 7), (11, 4)][:n]]
+
+
+def _sequential_tokens(m, params, reqs):
+    eng = Engine(m, params, donate_cache=False)
+    return [eng.generate(p[None], max_new_tokens=k,
+                         cache_len=MAX_LEN).tokens[0] for p, k in reqs]
+
+
+def _is_distributed(leaf) -> bool:
+    return (len(leaf.sharding.device_set) > 1
+            and not leaf.sharding.is_fully_replicated)
+
+
+# ---------------------------------------------------------------------------
+# per-family fork parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ATTENTION_FAMILIES)
+def test_sharded_fork_parity_and_forkstats(arch):
+    """TemplateServer.fork on the mesh -> sharded continuous batching must
+    match the single-device sequential Engine token for token, with the
+    same ForkStats byte accounting as a single-device fork (nbytes counts
+    GLOBAL array sizes, so sharding must not change the books)."""
+    m = get_smoke_model(arch, n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(2))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=13)
+    want = _sequential_tokens(m, params, reqs)
+
+    srv0 = TemplateServer(trace_batch=1, trace_seq=8)
+    srv0.register(tidal.static_function("f", m, params), {})
+    _, stats0 = srv0.fork("f", {})
+
+    plan = _tp_plan()
+    srv = TemplateServer(trace_batch=1, trace_seq=8, plan=plan)
+    srv.register(tidal.static_function("f", m, params), {})
+    session, stats = srv.fork("f", {})
+    assert (stats.reused_bytes, stats.streamed_bytes, stats.dynamic_bytes) \
+        == (stats0.reused_bytes, stats0.streamed_bytes, stats0.dynamic_bytes)
+
+    cbe = ContinuousBatchingEngine(m, session, n_slots=2, max_len=MAX_LEN,
+                                   plan=plan)
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+    # the forked weights really live in distributed buffers
+    assert any(_is_distributed(l) for l in jax.tree.leaves(cbe.params()))
+    assert any(_is_distributed(l) for l in jax.tree.leaves(cbe.pool.cache))
+
+
+def test_sharded_recurrent_family_parity():
+    """The dense slot pool (constant-size recurrent state) serves sharded
+    too — zamba's hybrid attention+mamba stack on the 8-way mesh."""
+    m = get_smoke_model("zamba2-2.7b")
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=1, n=2)
+    want = _sequential_tokens(m, params, reqs)
+    cbe = ContinuousBatchingEngine(m, params, n_slots=2, max_len=MAX_LEN,
+                                   plan=_tp_plan())
+    assert not cbe.paged
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+def test_sharded_streamed_prefill_mid_flight():
+    """Admission while the sharded weight stream is still in flight (layer-
+    streamed prefill over NamedSharding slices) stays token-identical."""
+    m = get_smoke_model("smollm-135m", n_layers=3)
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=7)
+    want = _sequential_tokens(m, params, reqs)
+    plan = _tp_plan()
+    srv = TemplateServer(trace_batch=1, trace_seq=8, plan=plan)
+    srv.register(tidal.static_function("f", m, params), {})
+    session, _ = srv.fork("f", {})
+    cbe = ContinuousBatchingEngine(m, session, n_slots=2, max_len=MAX_LEN,
+                                   plan=plan)
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+# ---------------------------------------------------------------------------
+# multi-instance FaaSRuntime
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh_runtime():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    m = get_smoke_model("smollm-135m", n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, mesh=mesh)
+    rt.deploy(tidal.static_function("fn-a", m, params), {}, prewarm_seq=8)
+    rt.deploy(tidal.static_function("fn-b", m, params), {}, prewarm_seq=8)
+    return m, params, rt
+
+
+def test_faas_mesh_spreads_instances_and_keeps_parity(mesh_runtime):
+    m, params, rt = mesh_runtime
+    assert len(rt.instances) == 2
+    prompt = np.arange(10, dtype=np.int32) % m.cfg.vocab_size
+    want = Engine(m, params, donate_cache=False).generate(
+        prompt[None], max_new_tokens=4, cache_len=MAX_LEN).tokens[0]
+    ra = rt.submit("fn-a", {}, prompt, 4)
+    rb = rt.submit("fn-b", {}, prompt, 4)
+    ra2 = rt.submit("fn-a", {}, prompt, 4)
+    assert (ra.kind, rb.kind, ra2.kind) == ("cold", "cold", "warm")
+    for r in (ra, rb, ra2):
+        np.testing.assert_array_equal(r.tokens, want)
+    # load-balanced placement: the two functions landed on different slices
+    placed = {k[0]: w.instance for k, w in rt._engines.items()}
+    assert placed["fn-a"] != placed["fn-b"]
+    # one sharded arena per (instance, model), each on 4 devices
+    assert len(rt._pools) == 2
+    for pool in rt._pools.values():
+        assert any(len(l.sharding.device_set) == 4
+                   for l in jax.tree.leaves(pool.cache))
+
+
+def test_faas_mesh_locality_routes_to_warm_instance(mesh_runtime):
+    """A new engine of an already-warm function prefers the instance that
+    holds its warm state (ClusterSim's locality policy, live)."""
+    m, params, rt = mesh_runtime
+    rt.evict()
+    prompt = np.arange(8, dtype=np.int32) % m.cfg.vocab_size
+    rt.submit("fn-a", {"v": 0}, prompt, 2)
+    rt.submit("fn-a", {"v": 1}, prompt, 2)      # same fn, new engine key
+    insts = [w.instance for k, w in rt._engines.items() if k[0] == "fn-a"]
+    assert len(insts) == 2 and insts[0] == insts[1]
+    # an unrelated function goes to the other (least-loaded) slice
+    rt.submit("fn-b", {}, prompt, 2)
+    b_inst = [w.instance for k, w in rt._engines.items() if k[0] == "fn-b"]
+    assert b_inst[0] != insts[0]
+
+
+def test_faas_mesh_evict_restores_pool_baseline(mesh_runtime):
+    m, params, rt = mesh_runtime
+    rt.evict()
+    baseline = rt.kv_pool_stats()
+    assert all(st["n_free_slots"] == 2 for st in baseline.values())
+    prompt = np.arange(6, dtype=np.int32)
+    for _ in range(2):
+        rt.submit("fn-a", {}, prompt, 2)
+        rt.submit("fn-b", {}, prompt, 2)
+        rt.evict()
+        assert rt.kv_pool_stats() == baseline
+
+
+def test_serving_mesh_axes_validated():
+    bad = jax.make_mesh((8,), ("model",))
+    with pytest.raises(ValueError, match="data"):
+        FaaSRuntime(mesh=bad)
+
+
+def test_sharded_prefill_entry_points_carry_shardings():
+    """The shared serve fns are built with explicit in/out shardings: a
+    decode step keeps the arena's NamedSharding across donation."""
+    m = get_smoke_model("smollm-135m", n_layers=1)
+    params = m.init_params(jax.random.PRNGKey(0))
+    plan = _tp_plan()
+    cbe = ContinuousBatchingEngine(m, params, n_slots=2, max_len=16,
+                                   plan=plan)
+    before = jax.tree.map(lambda l: l.sharding, cbe.pool.cache)
+    rid = cbe.submit(np.arange(4, dtype=np.int32), 3)
+    cbe.run()
+    after = jax.tree.map(lambda l: l.sharding, cbe.pool.cache)
+    assert before == after
+    assert cbe.results[rid].n_generated == 3
