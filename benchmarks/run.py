@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.fig18_distributed",
     "benchmarks.fig19_traces",
     "benchmarks.fig20_order_overhead",
+    "benchmarks.fig21_prefix_reuse",
     "benchmarks.table3_merging",
     "benchmarks.roofline_table",
 ]

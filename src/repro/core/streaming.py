@@ -150,11 +150,15 @@ def supports_streamed_prefill(model: Model) -> bool:
     return model.cfg.family in ("dense", "moe") and not model.is_encdec
 
 
-def streamed_prefill(session: ForkSession, inputs: dict, cache):
+def streamed_prefill(session: ForkSession, inputs: dict, cache, offset: int = 0):
     """Layer-by-layer prefill consuming weights as they arrive.
 
     Returns (last-token logits, filled cache) — must equal
-    ``model.prefill`` exactly (tested).
+    ``model.prefill`` exactly (tested).  With ``offset`` the tokens are a
+    prompt SUFFIX at positions ``offset..`` over a cache whose first
+    ``offset`` positions hold a reused prefix (prefix KV sharing from a
+    still-streaming fork): positions, RoPE and the mask carry the offset,
+    matching ``model.prefill_from``.
     """
     model = session.model
     cfg = model.cfg
@@ -167,12 +171,13 @@ def streamed_prefill(session: ForkSession, inputs: dict, cache):
     flat_specs, blocks_treedef = jax.tree_util.tree_flatten_with_path(blocks_specs)
     block_paths = ["blocks." + path_str(p) for p, _ in flat_specs]
 
-    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    off = jnp.asarray(offset, jnp.int32)
+    positions = jnp.broadcast_to(off + jnp.arange(S)[None, :], (B, S))
 
     @jax.jit
     def block_fn(bp, x, layer_cache):
         return transformer._dense_block(bp, x, cfg, positions, layer_cache,
-                                        jnp.int32(0))
+                                        off)
 
     x = embed_tokens(session.leaf("embed"), tokens,
                      scale_by_dim=cfg.scale_embed)

@@ -65,6 +65,10 @@ class TemplateServer:
         # onto different mesh slices)
         self.plan = plan
         self.templates: dict[str, FunctionTemplate] = {}
+        # fn -> int32 tokens of the function's shared prompt prefix: the
+        # template's WARM STATE beyond weights — serving runtimes bake its
+        # KV once into pinned paged-arena pages and share it across forks
+        self.template_prompts: dict[str, np.ndarray] = {}
         self.host_pool: dict[str, dict] = {}          # fn -> path -> np array
         self.device_cache: dict[str, dict] = {}       # fn -> path -> jax.Array
         self._leaf_order: dict[str, list] = {}        # fn -> [path,...]
@@ -113,9 +117,18 @@ class TemplateServer:
                    for a in d.values())
 
     def register(self, fn: LLMFunction, example_event: dict,
-                 resident_bytes: int = 0) -> FunctionTemplate:
-        """Build the function's template (offline or first-invocation)."""
+                 resident_bytes: int = 0,
+                 template_prompt=None) -> FunctionTemplate:
+        """Build the function's template (offline or first-invocation).
+
+        ``template_prompt`` records the function's shared prompt prefix
+        (system prompt) as part of the template: runtimes bake its KV at
+        prewarm and serve later invocations suffix-only."""
         model = fn.model
+        # a re-register without a template opts OUT: never leave a stale
+        # prompt behind; the new entry lands only after the initializer
+        # has run (a failing registration must not record warm state)
+        self.template_prompts.pop(fn.name, None)
         traced, fps = fn.run_initializer(example_event)
 
         specs = model.init_params(abstract=True)
@@ -154,6 +167,9 @@ class TemplateServer:
                 pool[path] = np.asarray(leaf.materialize())
         self.host_pool[fn.name] = pool
         self._refresh_residency(fn.name)
+        if template_prompt is not None:
+            self.template_prompts[fn.name] = np.asarray(
+                template_prompt, np.int32).reshape(-1)
         return template
 
     # ------------------------------------------------------------------

@@ -96,6 +96,16 @@ class Model:
                                   inputs["tokens"], cache)
         return transformer.prefill(params, self.cfg, inputs["tokens"], cache)
 
+    def prefill_from(self, params, inputs: dict, cache, offset):
+        """Suffix-only prefill against a cache holding a reused prompt
+        prefix of ``offset`` tokens (prefix KV sharing: positions, RoPE
+        and the causal mask are offset by the reused length)."""
+        if self.is_encdec:
+            raise ValueError(
+                f"{self.cfg.name}: enc-dec has no suffix-only prefill")
+        return transformer.prefill_from(params, self.cfg, inputs["tokens"],
+                                        cache, offset)
+
     def decode_step(self, params, cache, inputs: dict, pos):
         """One decode step.  ``pos`` is a scalar (whole batch at one
         position) or, for decoder-only families, an int32 vector [B] of

@@ -429,6 +429,34 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Cache):
     return logits[:, 0], new_cache
 
 
+def prefill_from(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 cache: Cache, offset: jax.Array):
+    """Suffix-only prefill: process ``tokens`` as positions ``offset ..
+    offset+S-1`` against a cache whose first ``offset`` positions are
+    ALREADY filled (a reused prompt prefix).
+
+    Positions, RoPE angles and the causal mask all carry the offset, and
+    the new K/V land at ``cache_pos=offset`` — so a prefix-reusing request
+    reproduces exactly the states a full prefill of prefix+suffix would
+    compute (token parity is enforced in tests).  ``offset`` is traced:
+    one executable serves every reuse length of a given suffix shape.
+    Dense / moe / MLA only (recurrent state has no positional cache).
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"{cfg.name}: {cfg.family!r} family has no suffix-only "
+            "prefill (recurrent state is not position-addressable)")
+    B, S = tokens.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    x = embed_tokens(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
+    positions = jnp.broadcast_to(offset + jnp.arange(S)[None, :], (B, S))
+    x, new_cache, _ = _scan_decoder_blocks(params, cfg, x, positions, cache,
+                                           offset, training=False)
+    x = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = lm_head(x, params, cfg.tied_embeddings)
+    return logits[:, 0], new_cache
+
+
 def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
                 tokens: jax.Array, pos: jax.Array):
     """One decode step.  tokens: [B, 1]; pos: scalar int32 (next position)

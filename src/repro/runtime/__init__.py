@@ -2,27 +2,34 @@
 
   engine      — sequential fixed-batch generation (the reference path)
   kv_pool     — KV cache pools: dense slot-indexed (recurrent-state
-                families) and block-paged with per-slot page tables
+                families) and block-paged with per-slot page tables,
+                page refcounts and copy-on-write PrefixHandles
                 (attention families)
-  continuous  — continuous-batching engine (admission queue + step loop)
+  prefix      — PrefixIndex: page-granular token-hash chain matching
+                incoming prompts to cached prompt-prefix KV
+  continuous  — continuous-batching engine (admission queue + step loop,
+                suffix-only prefill on prefix hits, temperature/top-p)
   faas        — FaaSRuntime front-end over TemplateServer + prewarm +
-                continuous batching, plus measured service-time oracles
-                for the cluster scheduler
+                continuous batching with template-baked prompt caches,
+                plus length-bucketed measured service-time oracles for
+                the cluster scheduler
 """
 
 from repro.distributed.sharding import ShardingPlan, serving_plan
 from repro.runtime.continuous import (ContinuousBatchingEngine, Request,
                                       RequestOutput, sharded_serve_fns)
-from repro.runtime.engine import Engine, GenerationResult, sample_greedy
+from repro.runtime.engine import (Engine, GenerationResult, sample_greedy,
+                                  sample_token)
 from repro.runtime.faas import (FaaSRuntime, MeasuredServiceTimes,
                                 SubmitResult, measure_service_times)
 from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
-                                   PoolExhausted)
+                                   PoolExhausted, PrefixHandle)
+from repro.runtime.prefix import PrefixIndex
 
 __all__ = [
     "ContinuousBatchingEngine", "Engine", "FaaSRuntime", "GenerationResult",
     "KVCachePool", "MeasuredServiceTimes", "PagedKVCachePool",
-    "PoolExhausted", "Request", "RequestOutput", "ShardingPlan",
-    "SubmitResult", "measure_service_times", "sample_greedy",
-    "serving_plan", "sharded_serve_fns",
+    "PoolExhausted", "PrefixHandle", "PrefixIndex", "Request",
+    "RequestOutput", "ShardingPlan", "SubmitResult", "measure_service_times",
+    "sample_greedy", "sample_token", "serving_plan", "sharded_serve_fns",
 ]

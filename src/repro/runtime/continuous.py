@@ -40,18 +40,21 @@ from repro.core.streaming import (ForkSession, streamed_prefill,
                                   supports_streamed_prefill)
 from repro.distributed.sharding import ShardingPlan
 from repro.models.registry import Model
-from repro.runtime.engine import sample_greedy
-from repro.runtime.kv_pool import KVCachePool, PagedKVCachePool
+from repro.runtime.engine import sample_greedy, sample_token
+from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
+                                   PoolExhausted)
 
 
 def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
                       donate_cache: bool = True):
-    """jit'd ``(prefill_fn, decode_fn)`` serve entry points whose in/out
-    shardings carry ``plan`` end to end: params arrive in their tensor-
-    parallel layout, the pool arena keeps its placement across donated
-    decode steps, and GSPMD partitions the dense/paged attention paths.
-    Tokens / positions / page tables / logits are replicated (host-driven
-    control state)."""
+    """jit'd ``(prefill_fn, prefill_from_fn, decode_fn)`` serve entry
+    points whose in/out shardings carry ``plan`` end to end: params arrive
+    in their tensor-parallel layout, the pool arena keeps its placement
+    across donated decode steps, and GSPMD partitions the dense/paged
+    attention paths.  Tokens / positions / page tables / logits are
+    replicated (host-driven control state).  ``prefill_from_fn`` is the
+    suffix-only entry point for prefix KV reuse (None for families without
+    one)."""
     rep = plan.replicated
     pshard = plan.param_shardings(model)
     paged = isinstance(pool, PagedKVCachePool)
@@ -62,6 +65,13 @@ def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
         lambda p, inputs, cache: model.prefill(p, inputs, cache),
         in_shardings=(pshard, rep, pc_shard),
         out_shardings=(rep, pc_shard))
+    prefill_from_fn = None
+    if model.supports_paged_kv:
+        prefill_from_fn = jax.jit(
+            lambda p, toks, cache, off: model.prefill_from(
+                p, {"tokens": toks}, cache, off),
+            in_shardings=(pshard, rep, pc_shard, rep),
+            out_shardings=(rep, pc_shard))
     if paged:
         ps = pool.page_size
         dshard = plan.paged_cache_shardings(model, pool.cache)
@@ -79,7 +89,10 @@ def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
             in_shardings=(pshard, dshard, rep, rep),
             out_shardings=(rep, dshard),
             donate_argnums=(1,) if donate_cache else ())
-    return prefill_fn, decode_fn
+    return prefill_fn, prefill_from_fn, decode_fn
+
+
+_UNMATCHED = object()                # prefix match not yet attempted
 
 
 @dataclasses.dataclass
@@ -88,6 +101,12 @@ class Request:
     prompt: np.ndarray               # [S] int32
     max_new_tokens: int
     submit_s: float
+    temperature: float = 0.0         # 0 = greedy (bit-parity reference)
+    top_p: float = 1.0
+    seed: int = 0                    # per-request sampling seed
+    # prefix-reuse match, resolved lazily at first admission check and
+    # cached ((handle, reuse_len) or None); _UNMATCHED = not yet looked up
+    prefix_hit: Any = _UNMATCHED
 
 
 @dataclasses.dataclass
@@ -99,6 +118,7 @@ class RequestOutput:
     ttft_s: float                    # submit -> first token (incl. queueing)
     e2e_s: float                     # submit -> retirement
     streamed_prefill: bool = False   # admitted while weights were in flight
+    reused_prefix_len: int = 0       # prompt tokens served from shared pages
 
 
 @dataclasses.dataclass
@@ -108,6 +128,7 @@ class _Active:
     tokens: list
     streamed: bool
     ttft_s: float
+    reused_prefix_len: int = 0
 
 
 class ContinuousBatchingEngine:
@@ -124,11 +145,13 @@ class ContinuousBatchingEngine:
                  max_len: int = 128,
                  prefill_fn: Optional[Callable] = None,
                  decode_fn: Optional[Callable] = None,
+                 prefill_from_fn: Optional[Callable] = None,
                  donate_cache: bool = True,
                  paged: Optional[bool] = None, page_size: int = 8,
                  n_pages: Optional[int] = None,
                  plan: Optional[ShardingPlan] = None,
-                 pool: Optional[Any] = None):
+                 pool: Optional[Any] = None,
+                 prefix_index: Optional[Any] = None):
         if model.is_encdec:
             raise NotImplementedError(
                 "continuous batching needs per-slot decode positions; the "
@@ -171,14 +194,19 @@ class ContinuousBatchingEngine:
                 # warm params place once; forked sessions place on resolve
                 self._params = jax.device_put(self._params,
                                               self._param_shardings)
-        if prefill_fn is None or decode_fn is None:
+        if prefill_fn is None or decode_fn is None or (
+                prefill_from_fn is None and self.paged):
             if plan is not None:
-                default_p, default_d = sharded_serve_fns(
+                default_p, default_pf, default_d = sharded_serve_fns(
                     model, self.pool, plan, donate_cache=donate_cache)
             else:
                 default_p = jax.jit(
                     lambda p, inputs, cache: model.prefill(p, inputs, cache))
+                default_pf = None
                 if self.paged:
+                    default_pf = jax.jit(
+                        lambda p, toks, cache, off: model.prefill_from(
+                            p, {"tokens": toks}, cache, off))
                     default_d = jax.jit(
                         lambda p, cache, toks, pos, pt:
                         model.decode_step_paged(
@@ -191,9 +219,14 @@ class ContinuousBatchingEngine:
                             p, cache, {"tokens": toks}, pos),
                         donate_argnums=(1,) if donate_cache else ())
             prefill_fn = prefill_fn or default_p
+            prefill_from_fn = prefill_from_fn or default_pf
             decode_fn = decode_fn or default_d
         self.prefill_fn = prefill_fn
+        self.prefill_from_fn = prefill_from_fn
         self.decode_fn = decode_fn
+        # per-function prefix index: admission matches each prompt against
+        # the baked/cached prefixes and serves the hit from shared pages
+        self.prefix_index = prefix_index
         # per-slot feedback state (free slots decode position 0 / token 0;
         # their logits are computed and discarded)
         self._tok = np.zeros((n_slots, 1), np.int32)
@@ -217,13 +250,20 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 8,
-               submit_s: Optional[float] = None) -> int:
+               submit_s: Optional[float] = None,
+               temperature: float = 0.0, top_p: float = 1.0,
+               seed: int = 0) -> int:
         """Enqueue one request.  ``submit_s`` backdates the arrival stamp so
         work done on the request's behalf before enqueueing (forking this
-        engine's session, say) counts toward its TTFT."""
+        engine's session, say) counts toward its TTFT.  ``temperature=0``
+        decodes greedily (the bit-parity reference); otherwise tokens are
+        drawn temperature/top-p with a per-request ``seed`` (deterministic
+        across runs and engines)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if temperature < 0 or not (0 < top_p <= 1):
+            raise ValueError("need temperature >= 0 and 0 < top_p <= 1")
         if len(prompt) + max_new_tokens > self.pool.max_len:
             raise ValueError(
                 f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
@@ -239,47 +279,89 @@ class ContinuousBatchingEngine:
         rid = self._next_id
         self._next_id += 1
         self.queue.append(Request(rid, prompt, max_new_tokens,
-                                  submit_s or time.perf_counter()))
+                                  submit_s or time.perf_counter(),
+                                  temperature=temperature, top_p=top_p,
+                                  seed=seed))
         return rid
 
     # ------------------------------------------------------------------
+    def _prefix_hit(self, req: Request):
+        """Resolve (and cache) the request's longest usable cached prefix.
+
+        Re-validated at admission: a handle released after matching falls
+        back to full prefill instead of failing the admission."""
+        if req.prefix_hit is _UNMATCHED:
+            req.prefix_hit = None
+            if self.paged and self.prefix_index is not None:
+                req.prefix_hit = self.prefix_index.match(req.prompt)
+        if req.prefix_hit is not None and not req.prefix_hit[0].pinned:
+            req.prefix_hit = None            # stale handle: full prefill
+        return req.prefix_hit
+
     def _can_admit(self, req: Request) -> bool:
         if self.paged:
-            return self.pool.can_admit(len(req.prompt) + req.max_new_tokens)
+            hit = self._prefix_hit(req)
+            return self.pool.can_admit(len(req.prompt) + req.max_new_tokens,
+                                       reuse_len=hit[1] if hit else 0)
         return bool(self.pool.n_free)
 
+    def _sample_first(self, req: Request, logits) -> int:
+        if req.temperature <= 0:
+            tok = sample_greedy(logits)
+            tok.block_until_ready()
+            return int(tok[0])
+        return sample_token(np.asarray(logits[0]), req.temperature,
+                            req.top_p, req.seed, 0)
+
     def _admit(self, req: Request) -> None:
+        hit = self._prefix_hit(req) if self.paged else None
+        reuse = hit[1] if hit else 0
         if self.paged:
-            slot = self.pool.alloc(len(req.prompt), req.max_new_tokens)
+            slot = self.pool.alloc(len(req.prompt), req.max_new_tokens,
+                                   shared_prefix=hit[0] if hit else None,
+                                   reuse_len=reuse)
         else:
             slot = self.pool.alloc()
-        inputs = {"tokens": jnp.asarray(req.prompt[None, :])}
-        # prefill runs on a transient batch-1 dense cache either way (same
-        # executable as the dense path); paged pools then keep only the
-        # prompt's pages
-        prefill_len = (self.pool.padded_len if self.paged
-                       else self.pool.max_len)
-        cache = self.model.make_cache(1, prefill_len)
-        if self.plan is not None:
-            cache = jax.device_put(cache, self._prefill_cache_shardings)
         streamed = (self.session is not None and self._params is None
                     and supports_streamed_prefill(self.model))
-        if streamed:
-            logits, cache = streamed_prefill(self.session, inputs, cache)
+        prefill_len = (self.pool.padded_len if self.paged
+                       else self.pool.max_len)
+        if reuse:
+            # suffix-only prefill: gather the slot's pages (aliased prefix
+            # + its COW partial copy) as the working dense cache, then run
+            # only the uncached tokens at offset positions
+            cache = self.pool.read_slot_full(slot)
+            suffix = jnp.asarray(req.prompt[None, reuse:])
+            if streamed:
+                logits, cache = streamed_prefill(
+                    self.session, {"tokens": suffix}, cache, offset=reuse)
+            else:
+                logits, cache = self.prefill_from_fn(
+                    self.params(), suffix, cache, jnp.int32(reuse))
         else:
-            logits, cache = self.prefill_fn(self.params(), inputs, cache)
-        tok = sample_greedy(logits)                      # [1]
-        tok.block_until_ready()
+            inputs = {"tokens": jnp.asarray(req.prompt[None, :])}
+            # prefill runs on a transient batch-1 dense cache either way
+            # (same executable as the dense path); paged pools then keep
+            # only the prompt's pages
+            cache = self.model.make_cache(1, prefill_len)
+            if self.plan is not None:
+                cache = jax.device_put(cache, self._prefill_cache_shardings)
+            if streamed:
+                logits, cache = streamed_prefill(self.session, inputs, cache)
+            else:
+                logits, cache = self.prefill_fn(self.params(), inputs, cache)
+        first = self._sample_first(req, logits)
         ttft = time.perf_counter() - req.submit_s
         if self.paged:
-            self.pool.write_prompt(slot, cache, len(req.prompt))
+            self.pool.write_suffix(slot, cache, reuse, len(req.prompt))
         else:
             self.pool.write_slot(slot, cache)
-        self._tok[slot, 0] = int(tok[0])
+        self._tok[slot, 0] = first
         # next decode writes the first generated token at position len(prompt)
         self._pos[slot] = len(req.prompt)
-        st = _Active(req=req, slot=slot, tokens=[int(tok[0])],
-                     streamed=streamed, ttft_s=ttft)
+        st = _Active(req=req, slot=slot, tokens=[first],
+                     streamed=streamed, ttft_s=ttft,
+                     reused_prefix_len=reuse)
         self.active[slot] = st
         if len(st.tokens) >= req.max_new_tokens:
             self._retire(slot)
@@ -296,7 +378,8 @@ class ContinuousBatchingEngine:
             n_generated=len(st.tokens),
             ttft_s=st.ttft_s,
             e2e_s=time.perf_counter() - st.req.submit_s,
-            streamed_prefill=st.streamed)
+            streamed_prefill=st.streamed,
+            reused_prefix_len=st.reused_prefix_len)
 
     # ------------------------------------------------------------------
     def _foreign_slots(self) -> int:
@@ -326,20 +409,45 @@ class ContinuousBatchingEngine:
         while self.queue and self._can_admit(self.queue[0]):
             self._admit(self.queue.popleft())
         if not self.active:
-            return bool(self.queue)
+            if self.queue:
+                # the pool is completely idle (no active slots here, no
+                # foreign slots — checked above) yet the head request
+                # still does not fit: nothing can ever retire to unblock
+                # it — only pinned prefix pages occupy the arena — so
+                # looping would livelock.  Drop the doomed request (the
+                # queue behind it stays servable) and surface the error.
+                head = self.queue.popleft()
+                raise PoolExhausted(
+                    f"request {head.req_id} needs more KV pages than the "
+                    "idle arena can ever free (pinned prefix pages shrink "
+                    "attainable capacity); use a larger arena or release "
+                    "template prefixes")
+            return False
         if self.paged:
             # crossing a page boundary this step maps one more page
             # (reserved at admission, so this can never exhaust the pool)
             for slot in self.active:
                 self.pool.ensure_len(slot, int(self._pos[slot]) + 1)
+            # the page table rides device-resident; only rows dirtied by
+            # admit/grow/retire re-upload (steady-state decode sends none)
             logits, self.pool.cache = self.decode_fn(
                 self.params(), self.pool.cache, jnp.asarray(self._tok),
-                jnp.asarray(self._pos), jnp.asarray(self.pool.page_table))
+                jnp.asarray(self._pos), self.pool.device_page_table())
         else:
             logits, self.pool.cache = self.decode_fn(
                 self.params(), self.pool.cache, jnp.asarray(self._tok),
                 jnp.asarray(self._pos))
         nxt = np.asarray(sample_greedy(logits))          # [n_slots]
+        sampled = [s for s in self.active
+                   if self.active[s].req.temperature > 0]
+        if sampled:
+            nxt = nxt.copy()                 # jax-backed views are read-only
+            rows = np.asarray(logits)
+            for slot in sampled:
+                st = self.active[slot]
+                nxt[slot] = sample_token(rows[slot], st.req.temperature,
+                                         st.req.top_p, st.req.seed,
+                                         len(st.tokens))
         for slot in list(self.active):
             st = self.active[slot]
             st.tokens.append(int(nxt[slot]))

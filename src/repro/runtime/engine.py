@@ -39,6 +39,29 @@ def sample_temperature(logits: jax.Array, rng: jax.Array,
     return jax.random.categorical(rng, logits / temperature, axis=-1).astype(jnp.int32)
 
 
+def sample_token(logits, temperature: float, top_p: float,
+                 seed: int, step: int) -> int:
+    """Temperature/top-p sampling for ONE logits row, deterministically
+    seeded per (request seed, emission index) — the continuous engine's
+    non-greedy path.  ``top_p`` keeps the smallest token set whose
+    cumulative probability reaches it (always at least the argmax, so
+    ``top_p -> 0`` degenerates to greedy)."""
+    z = np.asarray(logits, np.float64) / max(temperature, 1e-8)
+    z -= z.max()
+    probs = np.exp(z)
+    probs /= probs.sum()
+    if top_p < 1.0:
+        order = np.argsort(-probs, kind="stable")
+        csum = np.cumsum(probs[order])
+        keep = order[:int(np.searchsorted(csum, top_p)) + 1]
+        mask = np.zeros_like(probs)
+        mask[keep] = 1.0
+        probs *= mask
+        probs /= probs.sum()
+    rng = np.random.default_rng((seed, step))
+    return int(rng.choice(len(probs), p=probs))
+
+
 class Engine:
     """Batched generation for one model.
 

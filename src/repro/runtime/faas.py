@@ -53,6 +53,7 @@ from repro.models.registry import get_smoke_model
 from repro.runtime.continuous import (ContinuousBatchingEngine,
                                       sharded_serve_fns)
 from repro.runtime.kv_pool import KVCachePool, PagedKVCachePool
+from repro.runtime.prefix import PrefixIndex
 
 KINDS = ("warm", "fork", "cold")
 
@@ -123,6 +124,12 @@ class FaaSRuntime:
         # the instance's mesh slice — and lent to engines slot by slot;
         # eviction returns every borrowed slot/page (see ``evict``)
         self._pools: dict[tuple, object] = {}
+        # template-baked prompt-prefix KV: one pinned PrefixHandle + one
+        # PrefixIndex per (function, instance), shared by every fork of
+        # the function on that instance and surviving engine eviction
+        self._prefix_handles: dict[tuple, object] = {}
+        self._prefix_indexes: dict[tuple, PrefixIndex] = {}
+        self._baked_events: dict[str, dict] = {}
 
     @staticmethod
     def _make_instances(mesh: Optional[Mesh]) -> list:
@@ -168,6 +175,9 @@ class FaaSRuntime:
 
     def _serve_fns_for(self, fn_name: str,
                        inst: Optional[_Instance] = None) -> tuple:
+        """(prefill_fn, prefill_from_fn, decode_fn) shared by every engine
+        of one model on one instance (``prefill_from_fn`` — suffix-only
+        prefill for prefix reuse — is None for non-paged families)."""
         inst = inst or self.instances[0]
         model = self.functions[fn_name].model
         key = (id(model), inst.idx)
@@ -179,8 +189,12 @@ class FaaSRuntime:
             else:
                 prefill = jax.jit(
                     lambda p, i, c, m=model: m.prefill(p, i, c))
+                prefill_from = None
                 if model.supports_paged_kv:
                     # attention families decode against the paged arena
+                    prefill_from = jax.jit(
+                        lambda p, t, c, off, m=model: m.prefill_from(
+                            p, {"tokens": t}, c, off))
                     decode = jax.jit(
                         lambda p, c, t, pos, pt, m=model: m.decode_step_paged(
                             p, c, {"tokens": t}, pos, pt, self.page_size),
@@ -190,24 +204,137 @@ class FaaSRuntime:
                         lambda p, c, t, pos, m=model: m.decode_step(
                             p, c, {"tokens": t}, pos),
                         donate_argnums=(1,))
-                self._serve_fns[key] = (prefill, decode)
+                self._serve_fns[key] = (prefill, prefill_from, decode)
         return self._serve_fns[key]
 
     # ------------------------------------------------------------------
     def deploy(self, fn: LLMFunction, example_event: Optional[dict] = None,
-               prewarm_seq: int = 32) -> None:
+               prewarm_seq: int = 32,
+               template_prompt: Optional[object] = None) -> None:
         """Register the function's template and pre-warm its executables.
 
         Pre-warming compiles the ENGINE's actual serve entry points (the
         shared jit'd prefill at ``prewarm_seq`` and the pool-shaped decode)
         so the first invocation pays forking, not lazy compilation — the
-        §5.1 policy.  Prompts of other lengths still compile lazily."""
+        §5.1 policy.  Prompts of other lengths still compile lazily.
+
+        ``template_prompt`` (int32 tokens) is the function's shared prompt
+        prefix (system prompt / few-shot header): its KV is baked ONCE
+        into pinned pages of the instance's paged arena — the template
+        carries warm state, not just weights — and every invocation whose
+        prompt starts with it prefills only the suffix."""
+        if template_prompt is not None:
+            if not fn.model.supports_paged_kv:
+                raise ValueError(
+                    f"{fn.name}: template prompts need a paged attention "
+                    f"family (got {fn.model.cfg.family!r})")
+            n_tpl = len(np.asarray(template_prompt).reshape(-1))
+            if n_tpl > self.max_len - 1:
+                raise ValueError(
+                    f"{fn.name}: template prompt must leave room for a "
+                    f"suffix within max_len={self.max_len}")
+            if n_tpl < self.page_size:
+                raise ValueError(
+                    f"{fn.name}: template prompt of {n_tpl} tokens is "
+                    f"shorter than one page ({self.page_size}) — it could "
+                    "never be matched, only pin dead pages")
+        # a re-deploy REPLACES the function: evict its warm engines (they
+        # serve the old params, and their prefix index is shared — a new
+        # bake must never mix into an old engine's serving) and drop any
+        # previously baked prefix (its KV was computed under the old
+        # params, in the old model's pool)
+        if fn.name in self.functions:
+            self.evict(fn.name)
+        self.release_template_prefix(fn.name)
         self.functions[fn.name] = fn
-        self.server.register(fn, example_event or {})
+        self.server.register(fn, example_event or {},
+                             template_prompt=template_prompt)
+        if template_prompt is not None:
+            self._baked_events[fn.name] = dict(example_event or {})
+            # prewarm bake on the default instance; other mesh slices bake
+            # lazily the first time the function forks onto them
+            self._bake_template_prefix(fn.name, self.instances[0])
         if self.prewarm and not fn.model.is_encdec:
             self._fn_keys[fn.name] = self._prewarm_engine_fns(fn,
                                                               prewarm_seq)
             self.workers.prewarm_for_functions(self._fn_keys)
+
+    # ------------------------------------------------------------------
+    def _bake_template_prefix(self, fn_name: str, inst: _Instance,
+                              params_fn=None) -> None:
+        """Prefill the function's template prompt once and pin its KV
+        pages in the instance's shared arena (refcount 1 held by the
+        handle), registering the prefix for admission-time matching.
+
+        ``params_fn`` lazily supplies already-forked params (the engine
+        being built on the serve path) so a lazy per-instance bake does
+        not stream the whole model a second time; without it — the
+        deploy-time prewarm — the bake forks its own session."""
+        key = (fn_name, inst.idx)
+        if key in self._prefix_handles:
+            return
+        prompt = self.server.template_prompts.get(fn_name)
+        if prompt is None:
+            return
+        model = self.functions[fn_name].model
+        pool = self._pool_for(inst, model)
+        if params_fn is not None:
+            params = params_fn()
+        else:
+            session, _ = self.server.fork(fn_name,
+                                          self._baked_events[fn_name],
+                                          plan=inst.plan)
+            params = session.params()
+            if inst.plan is not None:
+                params = jax.device_put(params,
+                                        inst.plan.param_shardings(model))
+        prefill_fn = self._serve_fns_for(fn_name, inst)[0]
+        cache = model.make_cache(1, pool.padded_len)
+        if inst.plan is not None:
+            cache = jax.device_put(
+                cache, inst.plan.cache_shardings(model, cache))
+        _, cache = prefill_fn(params, {"tokens": jnp.asarray(prompt[None, :])},
+                              cache)
+        handle = pool.bake_prefix(cache, prompt)
+        index = self._prefix_indexes.setdefault(key,
+                                                PrefixIndex(self.page_size))
+        index.register(handle)
+        self._prefix_handles[key] = handle
+
+    def _prefix_index_for(self, fn_name: str, event: Optional[dict],
+                          inst: _Instance,
+                          params_fn=None) -> Optional[PrefixIndex]:
+        """The prefix index an engine of (function, event) may consult.
+
+        Baked KV is params-specific: engines of a *static* function all
+        share the baked prefix; a dynamic function's engines reuse it only
+        for the event it was baked with (other events carry different
+        dynamic weights, whose prefix KV would differ)."""
+        if fn_name not in self._baked_events:
+            return None
+        fn = self.functions[fn_name]
+        if not (fn.static
+                or dict(event or {}) == self._baked_events[fn_name]):
+            # check BEFORE baking: an engine that cannot use the prefix
+            # must not trigger a fork+prefill or pin pages on its instance
+            return None
+        self._bake_template_prefix(fn_name, inst, params_fn=params_fn)
+        return self._prefix_indexes.get((fn_name, inst.idx))
+
+    def release_template_prefix(self, fn_name: str) -> int:
+        """Unpin the function's baked prefix pages on every instance (they
+        free once no live slot aliases them) and STOP baking: later
+        invocations take the full-prefill path until a re-deploy with a
+        template prompt opts back in.  Returns handles dropped."""
+        self._baked_events.pop(fn_name, None)
+        keys = [k for k in self._prefix_handles if k[0] == fn_name]
+        for k in keys:
+            handle = self._prefix_handles.pop(k)
+            index = self._prefix_indexes.get(k)
+            if index is not None:
+                index.unregister(handle)
+            handle.pool.release_prefix(handle)
+        return len(keys)
 
     def _prewarm_engine_fns(self, fn: LLMFunction, seq: int) -> list:
         """Populate the jit caches of this model's shared serve fns by
@@ -230,7 +357,7 @@ class FaaSRuntime:
             return params
 
         for inst in self.instances:
-            prefill_fn, decode_fn = self._serve_fns_for(fn.name, inst)
+            prefill_fn, _, decode_fn = self._serve_fns_for(fn.name, inst)
             kp = (id(model), "prefill", inst.idx, 1, seq, self.max_len)
             kd = (id(model), "decode-pool", inst.idx, self.n_slots,
                   self.max_len)
@@ -341,12 +468,19 @@ class FaaSRuntime:
         model = self.functions[fn_name].model
         session, stats = self.server.fork(fn_name, event or {},
                                           plan=inst.plan)
-        prefill_fn, decode_fn = self._serve_fns_for(fn_name, inst)
+        prefill_fn, prefill_from_fn, decode_fn = self._serve_fns_for(fn_name,
+                                                                     inst)
         engine = ContinuousBatchingEngine(
             model, session, max_len=self.max_len,
             prefill_fn=prefill_fn, decode_fn=decode_fn,
+            prefill_from_fn=prefill_from_fn,
             page_size=self.page_size, plan=inst.plan,
             pool=self._pool_for(inst, model))
+        # a lazy per-instance bake reuses THIS fork's params rather than
+        # streaming the model a second time (params_fn only resolves —
+        # blocking on the stream — when a bake actually happens here)
+        engine.prefix_index = self._prefix_index_for(fn_name, event, inst,
+                                                     params_fn=engine.params)
         self._engines[key] = _WarmEngine(engine, now, inst.idx)
         self._invoked.add(fn_name)
         return key, engine, kind, stats
@@ -408,42 +542,59 @@ class FaaSRuntime:
 
 @dataclasses.dataclass
 class MeasuredServiceTimes:
-    """Wall-clock warm/fork/cold service times per function.
+    """Wall-clock warm/fork/cold service times per function, LENGTH-
+    BUCKETED: each kind maps to measurements at one or more prompt lengths
+    and ``service_s`` linearly interpolates between buckets (clamping
+    outside the measured range), so the scheduler's per-request
+    ``input_len`` actually changes the oracle's answer.
 
     Satisfies the duck-typed ``SchedulerConfig.measured`` hook: the sim
     calls ``service_s(fn_name, kind, input_len)`` and falls back to the
     analytic cost model whenever this returns None.  ``"*"`` is a wildcard
-    function entry.
-
-    This implementation is deliberately FLAT in input length: every request
-    of a measured function gets the time observed at ``measured_prompt_len``
-    regardless of ``input_len`` (the parameter stays in the protocol so a
-    length-bucketed oracle can drop in).  Good for validating the sim's
-    service-class mix and ordering against reality; not a length-dependence
-    model."""
-    times: dict                              # fn_name -> {kind: seconds}
+    function entry.  ``times`` values may be plain floats (one bucket) or
+    ``[(input_len, seconds), ...]`` lists."""
+    times: dict                  # fn_name -> {kind: float | [(len, s), ...]}
     measured_prompt_len: Optional[int] = None
+
+    def _buckets(self, fn_name: str, kind: str):
+        d = self.times.get(fn_name) or self.times.get("*")
+        if d is None or kind not in d:
+            return None
+        v = d[kind]
+        if isinstance(v, (int, float)):
+            return [(self.measured_prompt_len or 0, float(v))]
+        return sorted((int(length), float(s)) for length, s in v)
 
     def service_s(self, fn_name: str, kind: str,
                   input_len: Optional[int] = None) -> Optional[float]:
-        del input_len                        # flat: see class docstring
-        d = self.times.get(fn_name) or self.times.get("*")
-        if d is None:
+        pts = self._buckets(fn_name, kind)
+        if pts is None:
             return None
-        return d.get(kind)
+        if input_len is None or len(pts) == 1:
+            return pts[0][1]
+        xs = np.asarray([p[0] for p in pts], np.float64)
+        ys = np.asarray([p[1] for p in pts], np.float64)
+        return float(np.interp(float(input_len), xs, ys))
 
     def summary(self) -> str:
         rows = []
         for fn, d in sorted(self.times.items()):
-            rows.append(fn + ": " + " ".join(
-                f"{k}={d[k]*1e3:.1f}ms" for k in KINDS if k in d))
+            parts = []
+            for k in KINDS:
+                pts = self._buckets(fn, k)
+                if pts is None:
+                    continue
+                parts.append(k + "=" + "/".join(
+                    f"{s*1e3:.1f}ms@{length}" for length, s in pts))
+            rows.append(fn + ": " + " ".join(parts))
         return "\n".join(rows)
 
 
 def measure_service_times(runtime: FaaSRuntime, fn_events: dict,
                           prompt_len: int = 16, max_new_tokens: int = 4,
-                          warm_reps: int = 2,
-                          seed: int = 0) -> MeasuredServiceTimes:
+                          warm_reps: int = 2, seed: int = 0,
+                          prompt_lens: Optional[list] = None
+                          ) -> MeasuredServiceTimes:
     """Exercise each function's cold, fork and warm paths on the REAL
     runtime and record wall-clock service times.
 
@@ -452,25 +603,39 @@ def measure_service_times(runtime: FaaSRuntime, fn_events: dict,
     actually took (fork), not cold.  The warm figure is the best of
     ``warm_reps`` repeats: the first warm hit on a fresh engine may still
     pay one-off lazy compilation, which is a compile artifact, not the
-    steady-state warm service time the scheduler models."""
+    steady-state warm service time the scheduler models.
+
+    ``prompt_lens`` turns on LENGTH BUCKETING: the fork/warm dance repeats
+    at every bucket length and the oracle interpolates between them (cold
+    can only ever happen once per function, so it stays a single point)."""
     rng = np.random.default_rng(seed)
+    lens = sorted(set(prompt_lens or [prompt_len]))
     times: dict = {}
     for fn_name, event in fn_events.items():
         vocab = runtime.functions[fn_name].model.cfg.vocab_size
-        prompt = rng.integers(0, vocab, prompt_len).astype(np.int32)
         per: dict = {}
-        first = runtime.submit(fn_name, event, prompt, max_new_tokens)
-        per[first.kind] = first.ttft_s                      # cold (or fork)
-        runtime.evict(fn_name)                              # expire keep-alive
-        forked = runtime.submit(fn_name, event, prompt, max_new_tokens)
-        per.setdefault(forked.kind, forked.ttft_s)          # fork
-        for _ in range(max(1, warm_reps)):
-            warm = runtime.submit(fn_name, event, prompt, max_new_tokens)
-            prev = per.get(warm.kind)
-            per[warm.kind] = (warm.ttft_s if prev is None
-                              else min(prev, warm.ttft_s))
+
+        def record(kind: str, length: int, seconds: float):
+            pts = per.setdefault(kind, [])
+            for i, (L, s) in enumerate(pts):
+                if L == length:
+                    pts[i] = (L, min(s, seconds))
+                    return
+            pts.append((length, seconds))
+
+        for j, L in enumerate(lens):
+            prompt = rng.integers(0, vocab, L).astype(np.int32)
+            first = runtime.submit(fn_name, event, prompt, max_new_tokens)
+            record(first.kind, L, first.ttft_s)         # cold at 1st bucket
+            runtime.evict(fn_name)                      # expire keep-alive
+            forked = runtime.submit(fn_name, event, prompt, max_new_tokens)
+            if forked.kind not in per or j > 0:
+                record(forked.kind, L, forked.ttft_s)   # fork per bucket
+            for _ in range(max(1, warm_reps)):
+                warm = runtime.submit(fn_name, event, prompt, max_new_tokens)
+                record(warm.kind, L, warm.ttft_s)
         times[fn_name] = per
-    return MeasuredServiceTimes(times, measured_prompt_len=prompt_len)
+    return MeasuredServiceTimes(times, measured_prompt_len=lens[0])
 
 
 def measure_smoke_service_times(functions: dict, arch: str = "smollm-135m",

@@ -24,13 +24,25 @@ an admitted request can always grow to its declared maximum, so decode
 never stalls waiting for a page — while the arena is still sized for the
 sum of actual request lengths rather than ``n_slots * max_len``.
 Exhaustion raises :class:`PoolExhausted` instead of hanging admission.
+
+Prefix sharing (copy-on-write): every page carries a REFCOUNT.  A
+:class:`PrefixHandle` pins a span of already-filled prompt-prefix pages
+(TIDAL's template-baked warm state, at the KV level); ``alloc(...,
+shared_prefix=handle, reuse_len=r)`` maps the prefix's full pages straight
+into the new slot's page table — refcount++, zero copies — and makes ONE
+device copy of the trailing partial page when ``r`` ends mid-page, so the
+slot can keep appending without ever mutating the donor's page.  Shared
+pages return to the free list only when their refcount reaches 0
+(``release`` decrements uniformly: exclusively-owned pages sit at 1).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import ShardingPlan
@@ -39,6 +51,32 @@ from repro.models.registry import Model
 
 class PoolExhausted(RuntimeError):
     """No free slot/pages for an allocation (admission should defer)."""
+
+
+@dataclasses.dataclass
+class PrefixHandle:
+    """A pinned, refcounted span of prompt-prefix KV pages.
+
+    ``pages`` are physical arena pages in logical order; ``n_tokens`` may
+    end mid-page (the trailing partial page is the copy-on-write unit).
+    The handle itself holds one reference on every page — template prefix
+    pages stay resident across serve/evict cycles until ``release_prefix``
+    drops the pin.  ``tokens`` keeps the prefix token ids for exact-match
+    verification (the index's page hashes only nominate candidates).
+    """
+    pool: "PagedKVCachePool"
+    pages: tuple
+    n_tokens: int
+    tokens: np.ndarray
+    pinned: bool = True
+
+    @property
+    def page_size(self) -> int:
+        return self.pool.page_size
+
+    @property
+    def n_full_pages(self) -> int:
+        return self.n_tokens // self.page_size
 
 
 class KVCachePool:
@@ -149,6 +187,19 @@ class PagedKVCachePool:
         self._reserved = 0                 # reserved-but-unmapped blocks
         self._mapped: dict[int, int] = {}  # slot -> mapped block count
         self._budget: dict[int, int] = {}  # slot -> reserved block total
+        # prefix sharing: per-page refcount (0 = free / never allocated;
+        # exclusively-owned pages sit at 1, shared prefix pages higher)
+        self._page_refs = np.zeros(n_pages, np.int32)
+        # cumulative mapping counters — the benchmark/test surface for
+        # "a prefix hit maps strictly fewer fresh pages per request"
+        self.stats = {"fresh_pages_mapped": 0, "shared_pages_mapped": 0,
+                      "cow_page_copies": 0}
+        self.peak_used_pages = 0           # high-water resident footprint
+        # device-resident page table, synced by dirty row (decode-step
+        # upload micro-opt: admit/grow/retire touch a handful of rows, the
+        # full (n_slots, blocks_per_slot) table re-uploads only once)
+        self._device_pt = None
+        self._dirty_rows: set = set()
 
     # ---- accounting -------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -167,13 +218,26 @@ class PagedKVCachePool:
         """Pages neither mapped nor promised to an admitted request."""
         return len(self._free_pages) - self._reserved
 
-    def can_admit(self, n_tokens_total: int) -> bool:
-        return (bool(self._free_slots)
-                and self.blocks_for(n_tokens_total) <= self.n_available_pages)
+    def can_admit(self, n_tokens_total: int, reuse_len: int = 0) -> bool:
+        """Admissible now?  ``reuse_len`` tokens covered by a shared prefix
+        need no fresh pages for their full pages (the COW partial page, if
+        any, is already counted in ``blocks_for(total) - reuse//page``)."""
+        fresh = self.blocks_for(n_tokens_total) - reuse_len // self.page_size
+        return bool(self._free_slots) and fresh <= self.n_available_pages
 
     # ---- alloc / grow / release ------------------------------------------
-    def alloc(self, prompt_len: int, max_new_tokens: int) -> int:
-        """Claim a slot and reserve the request's worst-case block count."""
+    def alloc(self, prompt_len: int, max_new_tokens: int,
+              shared_prefix: Optional[PrefixHandle] = None,
+              reuse_len: int = 0) -> int:
+        """Claim a slot and reserve the request's worst-case block count.
+
+        With ``shared_prefix``, the first ``reuse_len`` tokens of the
+        prompt are served from the handle's already-filled pages: full
+        pages alias into the slot's page table (refcount++, no copy); a
+        trailing partial page — ``reuse_len`` ending mid-page — is copied
+        once into a fresh page the slot owns exclusively, so later writes
+        never touch the donor (copy-on-write).
+        """
         total = self.blocks_for(prompt_len + max_new_tokens)
         if total > self.blocks_per_slot:
             raise ValueError(
@@ -183,17 +247,56 @@ class PagedKVCachePool:
             raise ValueError(
                 f"request needs {total} pages but the arena only has "
                 f"{self.n_pages - 1} allocatable pages")
+        n_full = 0
+        if shared_prefix is not None and reuse_len > 0:
+            if shared_prefix.pool is not self:
+                raise ValueError("shared_prefix belongs to another pool")
+            if not shared_prefix.pinned:
+                raise ValueError("shared_prefix has been released")
+            if reuse_len > shared_prefix.n_tokens:
+                raise ValueError(
+                    f"reuse_len={reuse_len} exceeds the prefix's "
+                    f"{shared_prefix.n_tokens} cached tokens")
+            if reuse_len >= prompt_len:
+                raise ValueError(
+                    "reuse_len must leave at least one prompt token to "
+                    "prefill (the suffix produces the first logits)")
+            n_full = reuse_len // self.page_size
+        partial = (shared_prefix is not None and reuse_len > 0
+                   and reuse_len % self.page_size != 0)
+        fresh = total - n_full              # incl. the COW partial page
         if not self._free_slots:
             raise PoolExhausted("PagedKVCachePool exhausted: no free slots")
-        if total > self.n_available_pages:
+        if fresh > self.n_available_pages:
             raise PoolExhausted(
-                f"PagedKVCachePool exhausted: need {total} pages, "
+                f"PagedKVCachePool exhausted: need {fresh} fresh pages, "
                 f"{self.n_available_pages} available")
         slot = self._free_slots.pop()
         self._free_slot_set.discard(slot)
-        self._reserved += total
+        mapped = 0
+        if n_full:
+            # zero-copy aliasing of the page-aligned span
+            share = [int(p) for p in shared_prefix.pages[:n_full]]
+            self.page_table[slot, :n_full] = share
+            self._page_refs[share] += 1
+            mapped = n_full
+            self.stats["shared_pages_mapped"] += n_full
+        if partial:
+            # one page copy for the trailing partial page: the slot keeps
+            # appending tokens into ITS copy, the donor page never mutates
+            page = self._claim_free_page()
+            donor = int(shared_prefix.pages[n_full])
+            self.cache = jax.tree.map(
+                lambda arena: arena.at[:, page].set(arena[:, donor]),
+                self.cache)
+            self.page_table[slot, mapped] = page
+            mapped += 1
+            self.stats["cow_page_copies"] += 1
+        self._reserved += total - mapped
         self._budget[slot] = total
-        self._mapped[slot] = 0
+        self._mapped[slot] = mapped
+        if mapped:
+            self._touch(slot)
         return slot
 
     def ensure_len(self, slot: int, n_tokens: int) -> None:
@@ -208,39 +311,119 @@ class PagedKVCachePool:
         while self._mapped[slot] < need:
             if not self._free_pages:        # unreachable within budget
                 raise PoolExhausted("PagedKVCachePool: free list empty")
-            page = self._free_pages.pop()
+            page = self._claim_free_page()
             self.page_table[slot, self._mapped[slot]] = page
             self._mapped[slot] += 1
             self._reserved -= 1
+            self._touch(slot)
+
+    def _claim_free_page(self) -> int:
+        """Pop a free page at refcount 1, tracking counters + peak."""
+        page = self._free_pages.pop()
+        self._page_refs[page] = 1
+        self.stats["fresh_pages_mapped"] += 1
+        self.peak_used_pages = max(self.peak_used_pages, self.n_used_pages)
+        return page
+
+    def _unref_page(self, page: int) -> None:
+        self._page_refs[page] -= 1
+        if self._page_refs[page] == 0:
+            self._free_pages.append(page)
+        elif self._page_refs[page] < 0:
+            raise AssertionError(f"page {page} refcount went negative")
 
     def release(self, slot: int) -> None:
         if slot in self._free_slot_set or not (0 <= slot < self.n_slots):
             raise ValueError(f"bad slot release: {slot}")
         mapped = self._mapped.pop(slot)
         budget = self._budget.pop(slot)
-        self._free_pages.extend(int(p) for p in self.page_table[slot, :mapped])
+        for p in self.page_table[slot, :mapped]:
+            self._unref_page(int(p))
         self._reserved -= budget - mapped
         self.page_table[slot, :] = self.NULL_PAGE
         self._free_slots.append(slot)
         self._free_slot_set.add(slot)
+        self._touch(slot)
+
+    # ---- prefix sharing ---------------------------------------------------
+    def bake_prefix(self, sub_cache: Any, tokens) -> PrefixHandle:
+        """Materialize a prompt prefix as pinned shared pages.
+
+        ``sub_cache`` is a batch-1 prefilled dense cache covering
+        ``tokens`` (leaves ``[L, 1, T, ...]``, ``T`` a page multiple ≥
+        ``len(tokens)``).  Pages come straight from the free list — no
+        slot involved — with refcount 1 held by the returned handle, so
+        they survive every serve/evict cycle until ``release_prefix``.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        n_tokens = len(tokens)
+        if n_tokens < 1:
+            raise ValueError("a prefix needs at least one token")
+        nb = self.blocks_for(n_tokens)
+        if nb > self.n_available_pages:
+            raise PoolExhausted(
+                f"PagedKVCachePool exhausted: prefix needs {nb} pages, "
+                f"{self.n_available_pages} available")
+        pages = [self._claim_free_page() for _ in range(nb)]
+        self._write_blocks(np.asarray(pages, np.int32), sub_cache,
+                           first_block=0)
+        return PrefixHandle(pool=self, pages=tuple(pages),
+                            n_tokens=n_tokens, tokens=tokens)
+
+    def release_prefix(self, handle: PrefixHandle) -> None:
+        """Drop the handle's pin; pages free as their refcount hits 0
+        (live slots still aliasing them keep them alive)."""
+        if not handle.pinned or handle.pool is not self:
+            raise ValueError("handle is not pinned on this pool")
+        handle.pinned = False
+        for p in handle.pages:
+            self._unref_page(int(p))
+
+    def prefix_page_refs(self, handle: PrefixHandle):
+        """Current refcounts of the handle's pages (test/debug surface)."""
+        return [int(self._page_refs[p]) for p in handle.pages]
 
     # ---- cache movement ---------------------------------------------------
+    def _write_blocks(self, pages, sub_cache: Any, first_block: int) -> None:
+        """Scatter logical blocks ``first_block ..`` of a batch-1 dense
+        cache into the given physical ``pages`` (one per block)."""
+        ps = self.page_size
+        nb = len(pages)
+
+        def copy(arena, sub):
+            L, _, T = sub.shape[:3]
+            blocks = sub[:, 0].reshape((L, T // ps, ps) + sub.shape[3:])
+            span = blocks[:, first_block:first_block + nb]
+            return arena.at[:, pages].set(span.astype(arena.dtype))
+
+        self.cache = jax.tree.map(copy, self.cache, sub_cache)
+
     def write_prompt(self, slot: int, sub_cache: Any, n_tokens: int) -> None:
         """Copy a batch-1 prefilled dense cache's first ``n_tokens``
         positions into ``slot``'s pages (allocating them).  ``sub_cache``
         leaves are ``[L, 1, T, ...]`` with ``T`` a page multiple covering
         ``n_tokens`` — only the occupied pages are written."""
+        self.write_suffix(slot, sub_cache, 0, n_tokens)
+
+    def write_suffix(self, slot: int, sub_cache: Any, start_token: int,
+                     n_tokens: int) -> None:
+        """Copy positions ``start_token .. n_tokens-1`` of a batch-1 dense
+        cache into ``slot``'s pages (mapping any still missing).  Writes
+        whole blocks from ``start_token // page_size`` on — the block
+        containing ``start_token`` is the slot's COW copy when a shared
+        prefix ends mid-page, never an aliased donor page."""
         self.ensure_len(slot, n_tokens)
+        first = start_token // self.page_size
         nb = self.blocks_for(n_tokens)
-        pages = self.page_table[slot, :nb]
-        ps = self.page_size
-
-        def copy(arena, sub):
-            L, _, T = sub.shape[:3]
-            blocks = sub[:, 0].reshape((L, T // ps, ps) + sub.shape[3:])
-            return arena.at[:, pages].set(blocks[:, :nb].astype(arena.dtype))
-
-        self.cache = jax.tree.map(copy, self.cache, sub_cache)
+        if first >= nb:
+            return
+        pages = self.page_table[slot, first:nb]
+        shared = [int(p) for p in pages if self._page_refs[int(p)] > 1]
+        if shared:
+            raise ValueError(
+                f"slot {slot}: refusing to write shared pages {shared} "
+                "(aliased prefix pages are copy-on-write)")
+        self._write_blocks(pages, sub_cache, first_block=first)
 
     def read_slot(self, slot: int, n_tokens: int) -> Any:
         """Gather ``slot``'s first ``n_tokens`` positions back out as a
@@ -255,6 +438,58 @@ class PagedKVCachePool:
                 (L, 1, nb * self.page_size) + blocks.shape[3:])
 
         return jax.tree.map(gather, self.cache)
+
+    def read_slot_full(self, slot: int) -> Any:
+        """Gather the slot's WHOLE page-table row as a batch-1 dense cache
+        of ``padded_len`` positions — the suffix-prefill working cache:
+        mapped prefix blocks carry their KV, unmapped blocks read the null
+        page (masked out by position before any unwritten slot is
+        attended)."""
+        pages = self.page_table[slot]
+
+        def gather(arena):
+            blocks = arena[:, pages]                   # [L, bps, ps, ...]
+            L = blocks.shape[0]
+            return blocks.reshape((L, 1, self.padded_len) + blocks.shape[3:])
+
+        return jax.tree.map(gather, self.cache)
+
+    # ---- device page table (dirty-row sync) -------------------------------
+    def _touch(self, slot: int) -> None:
+        self._dirty_rows.add(slot)
+
+    def device_page_table(self):
+        """The page table as a device-resident array, re-uploading only
+        rows that changed since the last call (admit/grow/retire touch a
+        few rows; steady-state decode uploads nothing)."""
+        if self._device_pt is None:
+            if self.plan is not None:
+                pt = jax.device_put(self.page_table, self.plan.replicated)
+            else:
+                pt = jnp.asarray(self.page_table)
+            self._device_pt = pt
+            self._dirty_rows.clear()
+        elif self._dirty_rows:
+            rows = sorted(self._dirty_rows)
+            idx = jnp.asarray(rows, jnp.int32)
+            self._device_pt = self._device_pt.at[idx].set(
+                jnp.asarray(self.page_table[rows]))
+            self._dirty_rows.clear()
+        return self._device_pt
+
+    # ---- footprint --------------------------------------------------------
+    @property
+    def n_used_pages(self) -> int:
+        """Pages currently holding KV (mapped by slots or pinned by
+        prefixes) — the arena's RESIDENT footprint, as opposed to its
+        allocated capacity."""
+        return (self.n_pages - 1) - len(self._free_pages)
+
+    def page_nbytes(self) -> int:
+        return self.nbytes() // self.n_pages
+
+    def resident_nbytes(self) -> int:
+        return self.n_used_pages * self.page_nbytes()
 
     def nbytes(self) -> int:
         return sum(int(l.nbytes) for l in jax.tree.leaves(self.cache))

@@ -1,0 +1,637 @@
+"""Copy-on-write prefix KV reuse: pool refcount bookkeeping, prefix-index
+matching, token parity of suffix-only prefill against full prefill for
+every attention family (plain params, forked/streamed sessions), pressure
+behavior, FaaS template baking, the dirty-row device page table, the
+non-greedy sampling path and the length-bucketed measured oracle."""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api as tidal
+from repro.core.streaming import ForkSession, StreamEntry, WeightStreamer
+from repro.models.registry import get_smoke_model
+from repro.runtime.continuous import ContinuousBatchingEngine
+from repro.runtime.engine import Engine, sample_token
+from repro.runtime.faas import FaaSRuntime, MeasuredServiceTimes
+from repro.runtime.kv_pool import PagedKVCachePool, PoolExhausted
+from repro.runtime.prefix import PrefixIndex
+from repro.utils import path_str
+
+MAX_LEN = 32
+PS = 4
+
+
+def _model(arch="smollm-135m", n_layers=2):
+    return get_smoke_model(arch, n_layers=n_layers)
+
+
+def _patterned_cache(m, length, fill=None):
+    """A batch-1 dense cache with recognizable per-position content."""
+    cache = m.make_cache(1, length)
+    if fill is None:
+        return jax.tree.map(
+            lambda t: jnp.arange(t.size, dtype=jnp.float32).reshape(
+                t.shape).astype(t.dtype), cache)
+    return jax.tree.map(lambda t: jnp.full(t.shape, fill, t.dtype), cache)
+
+
+def _bake(pool, m, params, prefix):
+    """Prefill ``prefix`` and pin it as a shared-prefix handle."""
+    cache = m.make_cache(1, pool.padded_len)
+    logits, cache = jax.jit(lambda p, i, c: m.prefill(p, i, c))(
+        params, {"tokens": jnp.asarray(prefix[None, :])}, cache)
+    return pool.bake_prefix(cache, prefix)
+
+
+def _shared_prefix_requests(m, prefix, seed=3, spec=((3, 5), (7, 3), (5, 6))):
+    rng = np.random.default_rng(seed)
+    return [(np.concatenate([prefix, rng.integers(
+        0, m.cfg.vocab_size, s).astype(np.int32)]), n) for s, n in spec]
+
+
+def _sequential_tokens(m, params, reqs):
+    eng = Engine(m, params, donate_cache=False)
+    return [eng.generate(p[None], max_new_tokens=n,
+                         cache_len=MAX_LEN).tokens[0] for p, n in reqs]
+
+
+# ---------------------------------------------------------------------------
+# pool-level refcounting + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_prefix_refcounts_share_and_release():
+    """Aliased full pages refcount up per borrowing slot and free only at
+    refcount 0; the handle's pin survives every serve cycle."""
+    m = _model(n_layers=1)
+    pool = PagedKVCachePool(m, n_slots=3, max_len=MAX_LEN, page_size=PS)
+    prefix = np.arange(8, dtype=np.int32)                # 2 full pages
+    h = _bake(pool, m, m.init_params(jax.random.PRNGKey(0)), prefix)
+    base_free = pool.n_free_pages
+    assert pool.prefix_page_refs(h) == [1, 1]
+
+    a = pool.alloc(12, 4, shared_prefix=h, reuse_len=8)
+    b = pool.alloc(12, 4, shared_prefix=h, reuse_len=8)
+    assert pool.prefix_page_refs(h) == [3, 3]
+    # page-aligned reuse: zero fresh pages mapped at admission
+    assert pool.n_free_pages == base_free
+    pool.ensure_len(a, 12)
+    pool.ensure_len(b, 12)
+    assert pool.n_free_pages == base_free - 2            # one fresh each
+    pool.release(a)
+    assert pool.prefix_page_refs(h) == [2, 2]
+    pool.release(b)
+    assert pool.prefix_page_refs(h) == [1, 1]
+    assert pool.n_free_pages == base_free                # slots' pages back
+    pool.release_prefix(h)
+    assert not h.pinned
+    assert pool.n_free_pages == pool.n_pages - 1         # pin dropped
+    with pytest.raises(ValueError):
+        pool.release_prefix(h)                           # double unpin
+    with pytest.raises(ValueError, match="released"):
+        pool.alloc(12, 4, shared_prefix=h, reuse_len=8)
+
+
+def test_prefix_cow_partial_page_never_mutates_donor():
+    """Reusing a prefix that ends mid-page copies that page once; the
+    borrowing slot's suffix writes land in ITS copy and the donor page's
+    tokens stay bit-identical."""
+    m = _model(n_layers=1)
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    prefix = np.arange(10, dtype=np.int32)               # 2 full + 2 tokens
+    sub = _patterned_cache(m, pool.padded_len)
+    h = pool.bake_prefix(sub, prefix)
+    donor_page = h.pages[2]
+    before = jax.tree.map(lambda a: np.asarray(a[:, donor_page]), pool.cache)
+
+    slot = pool.alloc(12, 4, shared_prefix=h, reuse_len=10)
+    assert pool.stats["cow_page_copies"] == 1
+    cow_page = int(pool.page_table[slot, 2])
+    assert cow_page != donor_page
+    # overwrite the slot's suffix (positions 10..11) with different content
+    pool.write_suffix(slot, _patterned_cache(m, pool.padded_len, fill=7),
+                      10, 12)
+    after = jax.tree.map(lambda a: np.asarray(a[:, donor_page]), pool.cache)
+    for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(x, y)
+    # ...and the COW copy did change
+    cow = jax.tree.map(lambda a: np.asarray(a[:, cow_page]), pool.cache)
+    assert any(not np.array_equal(x, y) for x, y in
+               zip(jax.tree.leaves(before), jax.tree.leaves(cow)))
+    # writing an ALIASED page is refused outright
+    with pytest.raises(ValueError, match="shared"):
+        pool.write_prompt(slot, sub, 8)
+    pool.release(slot)
+    assert pool.prefix_page_refs(h) == [1, 1, 1]
+
+
+def test_prefix_alloc_validations():
+    m = _model(n_layers=1)
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    other = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    h = _bake(pool, m, m.init_params(jax.random.PRNGKey(0)),
+              np.arange(8, dtype=np.int32))
+    with pytest.raises(ValueError, match="another pool"):
+        other.alloc(12, 4, shared_prefix=h, reuse_len=8)
+    with pytest.raises(ValueError, match="at least one prompt token"):
+        pool.alloc(8, 4, shared_prefix=h, reuse_len=8)   # nothing to prefill
+    with pytest.raises(ValueError, match="cached tokens"):
+        pool.alloc(16, 4, shared_prefix=h, reuse_len=12)
+
+
+def test_prefix_refcount_property_random_interleavings():
+    """Allocator conservation law under random bake/alloc/grow/release
+    interleavings (stdlib random — no hypothesis in this container):
+    every page is exactly one of {free, refcounted}, available never goes
+    negative, and releasing everything restores the empty-arena state."""
+    m = _model(n_layers=1)
+    rng = random.Random(1234)
+    pool = PagedKVCachePool(m, n_slots=4, max_len=MAX_LEN, page_size=PS,
+                            n_pages=21)
+    zero = m.make_cache(1, pool.padded_len)
+    handles, slots = [], {}
+    for step in range(120):
+        op = rng.random()
+        if op < 0.25 and pool.n_available_pages >= 3:
+            n_tok = rng.randint(1, 3 * PS)
+            try:
+                handles.append(pool.bake_prefix(
+                    zero, np.arange(n_tok, dtype=np.int32)))
+            except PoolExhausted:
+                pass
+        elif op < 0.55:
+            total = rng.randint(2, MAX_LEN)
+            prompt = rng.randint(1, total - 1)
+            use = [h for h in handles if h.pinned and h.n_tokens < prompt]
+            h = rng.choice(use) if use and rng.random() < 0.7 else None
+            reuse = h.n_tokens if h else 0
+            try:
+                s = pool.alloc(prompt, total - prompt, shared_prefix=h,
+                               reuse_len=reuse)
+                slots[s] = total
+            except PoolExhausted:
+                pass
+        elif op < 0.75 and slots:
+            s = rng.choice(list(slots))
+            pool.ensure_len(s, rng.randint(1, slots[s]))
+        elif op < 0.9 and slots:
+            s = rng.choice(list(slots))
+            slots.pop(s)
+            pool.release(s)
+        else:
+            pinned = [h for h in handles if h.pinned]
+            if pinned:
+                pool.release_prefix(rng.choice(pinned))
+        # drop released slots from our book (the op above may have popped)
+        slots = {s: t for s, t in slots.items()
+                 if s not in pool._free_slot_set}
+        # conservation: free + refcounted == all allocatable pages
+        refs = pool._page_refs[1:]
+        free = set(pool._free_pages)
+        assert len(free) + int((refs > 0).sum()) == pool.n_pages - 1
+        assert all((int(p) in free) == (refs[int(p) - 1] == 0)
+                   for p in range(1, pool.n_pages))
+        assert pool.n_available_pages >= 0
+    for s in list(slots):
+        pool.release(s)
+    for h in handles:
+        if h.pinned:
+            pool.release_prefix(h)
+    assert pool.n_free_pages == pool.n_pages - 1
+    assert pool.n_available_pages == pool.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# prefix index
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_longest_hit_and_partial_tail():
+    m = _model(n_layers=1)
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    zero = m.make_cache(1, pool.padded_len)
+    short = pool.bake_prefix(zero, np.arange(8, dtype=np.int32))
+    long = pool.bake_prefix(zero, np.arange(14, dtype=np.int32))  # +tail
+    idx = PrefixIndex(PS)
+    idx.register(short)
+    idx.register(long)
+    # full-prompt hit extends into the long handle's partial tail
+    hit = idx.match(np.arange(20, dtype=np.int32))
+    assert hit == (long, 14)
+    # divergence after page 2 falls back to the page-aligned common span
+    prompt = np.arange(16, dtype=np.int32)
+    prompt[9] = 99
+    h, reuse = idx.match(prompt)
+    assert reuse == 8
+    # reuse always leaves >= 1 token to prefill
+    assert idx.match(np.arange(14, dtype=np.int32)) == (long, 13)
+    # no usable prefix at all
+    assert idx.match(np.arange(100, 120, dtype=np.int32)) is None
+    # released handles never match, and unregister forgets the chain
+    pool.release_prefix(long)
+    assert idx.match(np.arange(20, dtype=np.int32)) == (short, 8)
+    idx.unregister(short)
+    assert idx.match(np.arange(20, dtype=np.int32)) is None
+
+
+def test_prefix_index_unregister_keeps_shared_chain_positions():
+    """Unregistering a short prefix must not orphan a longer one that
+    shares its leading pages: the survivor takes over the vacated chain
+    positions (regression: the walk broke at the missing depth)."""
+    m = _model(n_layers=1)
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    zero = m.make_cache(1, pool.padded_len)
+    short = pool.bake_prefix(zero, np.arange(4, dtype=np.int32))
+    long = pool.bake_prefix(zero, np.arange(8, dtype=np.int32))
+    idx = PrefixIndex(PS)
+    idx.register(short)        # owns the depth-1 chain slot
+    idx.register(long)
+    idx.unregister(short)
+    assert idx.match(np.arange(12, dtype=np.int32)) == (long, 8)
+
+
+# ---------------------------------------------------------------------------
+# engine parity: suffix-only prefill == full prefill, per family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "phi3.5-moe-42b-a6.6b",
+                                  "deepseek-v3-671b"])
+def test_prefix_reuse_token_parity_per_family(arch):
+    """A request served via prefix reuse (aliased pages + COW partial page
+    + suffix-only prefill) must emit bit-identical greedy tokens to the
+    same request served with full prefill — dense, moe and MLA — while
+    mapping STRICTLY fewer fresh pages per admitted request."""
+    m = _model(arch)
+    params = m.init_params(jax.random.PRNGKey(2))
+    prefix = np.random.default_rng(0).integers(
+        0, m.cfg.vocab_size, 13).astype(np.int32)        # partial tail
+    reqs = _shared_prefix_requests(m, prefix, seed=13)
+    want = _sequential_tokens(m, params, reqs)
+
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    h = _bake(pool, m, params, prefix)
+    idx = PrefixIndex(PS)
+    idx.register(h)
+    fresh0 = pool.stats["fresh_pages_mapped"]
+    cbe = ContinuousBatchingEngine(m, params, max_len=MAX_LEN, pool=pool,
+                                   prefix_index=idx)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+        assert out[rid].reused_prefix_len == 13
+    fresh_with = pool.stats["fresh_pages_mapped"] - fresh0
+
+    flat = ContinuousBatchingEngine(m, params, n_slots=2, max_len=MAX_LEN,
+                                    page_size=PS)
+    fresh0 = flat.pool.stats["fresh_pages_mapped"]
+    rids = [flat.submit(p, n) for p, n in reqs]
+    out = flat.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+        assert out[rid].reused_prefix_len == 0
+    fresh_without = flat.pool.stats["fresh_pages_mapped"] - fresh0
+    # strictly fewer fresh pages per admitted request on a hit
+    assert fresh_with < fresh_without
+    assert fresh_with <= fresh_without - len(reqs) * (13 // PS - 1)
+
+
+def test_prefix_reuse_parity_from_forked_streamed_session():
+    """Prefix reuse composes with layer-streamed prefill: a request
+    admitted from a still-streaming ForkSession prefills only the suffix
+    (offset positions) and stays bit-identical."""
+    import time
+
+    m = _model(n_layers=3)
+    params = m.init_params(jax.random.PRNGKey(0))
+    prefix = np.random.default_rng(5).integers(
+        0, m.cfg.vocab_size, 11).astype(np.int32)
+    reqs = _shared_prefix_requests(m, prefix, seed=7)
+    want = _sequential_tokens(m, params, reqs)
+
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    h = _bake(pool, m, params, prefix)
+    idx = PrefixIndex(PS)
+    idx.register(h)
+
+    flat = {path_str(p): np.asarray(l)
+            for p, l in jax.tree_util.tree_leaves_with_path(params)}
+
+    def fetch(arr):
+        time.sleep(0.003)
+        return arr
+
+    entries = [StreamEntry((path, ()), fetch=lambda a=arr: fetch(a))
+               for path, arr in flat.items()]
+    session = ForkSession(m, WeightStreamer(entries, {}, {}).start(),
+                          {path: ("whole",) for path in flat})
+    cbe = ContinuousBatchingEngine(m, session, max_len=MAX_LEN, pool=pool,
+                                   prefix_index=idx)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    assert out[rids[0]].streamed_prefill
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+        assert out[rid].reused_prefix_len == 11
+
+
+# ---------------------------------------------------------------------------
+# pressure / fallback
+# ---------------------------------------------------------------------------
+
+def test_prefix_reuse_under_page_pressure_drains():
+    """An arena too small to hold the workload WITHOUT sharing still
+    drains it bit-identically when the prefix is shared: reuse-aware
+    admission defers instead of deadlocking, and retirement unblocks."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prefix = np.random.default_rng(1).integers(
+        0, m.cfg.vocab_size, 12).astype(np.int32)        # 3 full pages
+    reqs = _shared_prefix_requests(
+        m, prefix, seed=21, spec=((3, 5), (7, 3), (5, 6), (2, 4)))
+    want = _sequential_tokens(m, params, reqs)
+    # 12 allocatable pages: 3 pinned prefix + room for ~2 concurrent
+    # suffixes, but NOT for even two full 5-6 block requests side by side
+    pool = PagedKVCachePool(m, n_slots=3, max_len=MAX_LEN, page_size=PS,
+                            n_pages=13)
+    h = _bake(pool, m, params, prefix)
+    idx = PrefixIndex(PS)
+    idx.register(h)
+    base_free = pool.n_free_pages
+    cbe = ContinuousBatchingEngine(m, params, max_len=MAX_LEN, pool=pool,
+                                   prefix_index=idx)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+    assert pool.n_free_pages == base_free                # no leak
+
+
+def test_prefix_released_mid_queue_falls_back_to_full_prefill():
+    """A handle released between submit and admission must not fail the
+    request: admission falls back to full prefill, bit-identically."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prefix = np.random.default_rng(2).integers(
+        0, m.cfg.vocab_size, 8).astype(np.int32)
+    reqs = _shared_prefix_requests(m, prefix, seed=4)[:2]
+    want = _sequential_tokens(m, params, reqs)
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    h = _bake(pool, m, params, prefix)
+    idx = PrefixIndex(PS)
+    idx.register(h)
+    cbe = ContinuousBatchingEngine(m, params, max_len=MAX_LEN, pool=pool,
+                                   prefix_index=idx)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    pool.release_prefix(h)                               # yank the prefix
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+        assert out[rid].reused_prefix_len == 0
+    assert pool.n_free_pages == pool.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# FaaS runtime: template-baked prompt caches
+# ---------------------------------------------------------------------------
+
+def test_faas_template_bake_reuse_and_no_leak():
+    """deploy(template_prompt=) bakes the prefix ONCE at prewarm; warm
+    invocations and re-forks after eviction all reuse it; serve→evict
+    cycles return every non-pinned page, with the template pages pinned
+    exactly once throughout."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, m.cfg.vocab_size, 12).astype(np.int32)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=PS)
+    rt.deploy(tidal.static_function("fn-sys", m, params), {}, prewarm_seq=8,
+              template_prompt=template)
+    handle = rt._prefix_handles[("fn-sys", 0)]
+    pool = next(iter(rt._pools.values()))
+    assert pool.prefix_page_refs(handle) == [1, 1, 1]    # pinned once
+    baseline = rt.kv_pool_stats()
+
+    suffix = rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+    prompt = np.concatenate([template, suffix])
+    want = Engine(m, params, donate_cache=False).generate(
+        prompt[None], max_new_tokens=4, cache_len=MAX_LEN).tokens[0]
+    for cycle in range(3):
+        r = rt.submit("fn-sys", {}, prompt, 4)
+        np.testing.assert_array_equal(r.tokens, want)
+        rt.evict()
+        assert rt.kv_pool_stats() == baseline            # no arena leak
+        assert pool.prefix_page_refs(handle) == [1, 1, 1]
+    # a prompt NOT starting with the template takes the full path, same pool
+    other = rng.integers(0, m.cfg.vocab_size, 10).astype(np.int32)
+    r = rt.submit("fn-sys", {}, other, 4)
+    assert r.tokens.shape == (4,)
+    rt.evict()
+    assert rt.kv_pool_stats() == baseline
+    # dropping the template returns the pinned pages too, and STAYS
+    # dropped: the next invocation takes the full path, no silent re-bake
+    assert rt.release_template_prefix("fn-sys") == 1
+    assert pool.n_free_pages == pool.n_pages - 1
+    rt.evict()
+    r = rt.submit("fn-sys", {}, prompt, 4)
+    np.testing.assert_array_equal(r.tokens, want)
+    assert not rt._prefix_handles and pool.n_used_pages == 0
+    # a re-deploy with a NEW template prompt re-bakes it (and only it)
+    new_template = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    rt.deploy(tidal.static_function("fn-sys", m, params), {}, prewarm_seq=8,
+              template_prompt=new_template)
+    handle2 = rt._prefix_handles[("fn-sys", 0)]
+    np.testing.assert_array_equal(handle2.tokens, new_template)
+    assert pool.prefix_page_refs(handle2) == [1, 1]
+
+
+def test_faas_dynamic_function_reuses_only_baked_event():
+    """Baked prefix KV is params-specific: a LoRA function's engines reuse
+    it for the event it was baked with, never for other adapters (whose
+    dynamic weights would yield different prefix KV)."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    template = np.random.default_rng(3).integers(
+        0, m.cfg.vocab_size, 8).astype(np.int32)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=PS)
+    rt.deploy(tidal.lora_function("fn-lora", m, params,
+                                  ["blocks.attn.wq"], n_adapters=2),
+              {"adapter": "adapter-0"}, prewarm_seq=8,
+              template_prompt=template)
+    inst = rt.instances[0]
+    assert rt._prefix_index_for("fn-lora", {"adapter": "adapter-0"},
+                                inst) is not None
+    assert rt._prefix_index_for("fn-lora", {"adapter": "adapter-1"},
+                                inst) is None
+
+
+def test_faas_template_prompt_validations():
+    m = _model()
+    s = get_smoke_model("zamba2-2.7b")
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8)
+    with pytest.raises(ValueError, match="paged attention"):
+        rt.deploy(tidal.static_function(
+            "f-ssm", s, s.init_params(jax.random.PRNGKey(0))), {},
+            template_prompt=np.arange(4, dtype=np.int32))
+    with pytest.raises(ValueError, match="room for a suffix"):
+        rt.deploy(tidal.static_function(
+            "f-big", m, m.init_params(jax.random.PRNGKey(0))), {},
+            template_prompt=np.zeros(MAX_LEN, np.int32))
+    # a sub-page template could never be matched — only pin dead pages
+    with pytest.raises(ValueError, match="shorter than one page"):
+        rt.deploy(tidal.static_function(
+            "f-tiny", m, m.init_params(jax.random.PRNGKey(0))), {},
+            template_prompt=np.zeros(rt.page_size - 1, np.int32))
+
+
+def test_unadmittable_request_raises_instead_of_livelocking():
+    """Pinned template pages shrink the arena's attainable capacity: a
+    non-matching request whose worst case can no longer EVER fit must
+    raise PoolExhausted from the step loop, not spin forever (regression:
+    run() hung with an idle pool and an unadmittable queue head)."""
+    m = _model(n_layers=1)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, m.cfg.vocab_size, 12).astype(np.int32)
+    rt = FaaSRuntime(n_slots=1, max_len=32, trace_seq=8, page_size=PS)
+    rt.deploy(tidal.static_function("fn", m, params), {}, prewarm_seq=8,
+              template_prompt=template)                  # pins 3 of 8 pages
+    bad = rng.integers(0, m.cfg.vocab_size, 28).astype(np.int32)
+    with pytest.raises(PoolExhausted, match="pinned prefix"):
+        rt.submit("fn", {}, bad, 4)                      # needs all 8 pages
+    # the matching prompt still serves (its prefix pages are aliased)
+    good = np.concatenate([template, bad[:16]])
+    assert rt.submit("fn", {}, good, 4).tokens.shape == (4,)
+
+
+def test_redeploy_replaces_bake_and_evicts_stale_engines():
+    """Re-deploying a function must (a) drop the old deploy's baked
+    prefix — serving it would reuse KV computed under the OLD params —
+    and (b) evict the old warm engines, so a NEW bake can never mix into
+    an old engine's serving (regressions: both produced silent token
+    mismatches)."""
+    m = _model()
+    v1 = m.init_params(jax.random.PRNGKey(0))
+    v2 = m.init_params(jax.random.PRNGKey(9))
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    prompt = np.concatenate(
+        [template, rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)])
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=PS)
+    rt.deploy(tidal.static_function("fn", m, v1), {}, prewarm_seq=8,
+              template_prompt=template)
+    rt.submit("fn", {}, prompt, 4)                       # warm v1 engine
+    # (a) re-deploy WITHOUT a template: bake dropped, server prompt gone
+    rt.deploy(tidal.static_function("fn", m, v2), {}, prewarm_seq=8)
+    assert not rt._prefix_handles and "fn" not in rt._baked_events
+    assert "fn" not in rt.server.template_prompts
+    assert not rt.warm_engines()                         # v1 engine evicted
+    want2 = Engine(m, v2, donate_cache=False).generate(
+        prompt[None], max_new_tokens=4, cache_len=MAX_LEN).tokens[0]
+    np.testing.assert_array_equal(rt.submit("fn", {}, prompt, 4).tokens,
+                                  want2)
+    # (b) re-deploy WITH a template while a v2 engine is warm: the v2
+    # engine must not survive to serve the v3 bake
+    v3 = m.init_params(jax.random.PRNGKey(4))
+    rt.deploy(tidal.static_function("fn", m, v3), {}, prewarm_seq=8,
+              template_prompt=template)
+    assert not rt.warm_engines()
+    want3 = Engine(m, v3, donate_cache=False).generate(
+        prompt[None], max_new_tokens=4, cache_len=MAX_LEN).tokens[0]
+    r = rt.submit("fn", {}, prompt, 4)
+    np.testing.assert_array_equal(r.tokens, want3)
+    assert r.tokens.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# device page table (dirty-row sync micro-opt)
+# ---------------------------------------------------------------------------
+
+def test_device_page_table_syncs_dirty_rows_only():
+    m = _model(n_layers=1)
+    pool = PagedKVCachePool(m, n_slots=3, max_len=MAX_LEN, page_size=PS)
+    t0 = pool.device_page_table()
+    np.testing.assert_array_equal(np.asarray(t0), pool.page_table)
+    # no mutation -> the SAME device array comes back (no upload)
+    assert pool.device_page_table() is t0
+    slot = pool.alloc(9, 4)
+    pool.ensure_len(slot, 9)
+    t1 = pool.device_page_table()
+    assert t1 is not t0
+    np.testing.assert_array_equal(np.asarray(t1), pool.page_table)
+    assert pool.device_page_table() is t1                # clean again
+    pool.release(slot)
+    np.testing.assert_array_equal(np.asarray(pool.device_page_table()),
+                                  pool.page_table)
+
+
+# ---------------------------------------------------------------------------
+# non-greedy sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_temperature_zero_matches_sequential_engine():
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    reqs = [(rng.integers(0, m.cfg.vocab_size, s).astype(np.int32), n)
+            for s, n in [(4, 5), (9, 3), (6, 6)]]
+    want = _sequential_tokens(m, params, reqs)
+    cbe = ContinuousBatchingEngine(m, params, n_slots=2, max_len=MAX_LEN)
+    rids = [cbe.submit(p, n, temperature=0.0) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
+def test_sampling_deterministic_per_seed_and_top_p():
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = np.arange(8, dtype=np.int32) % m.cfg.vocab_size
+
+    def run(seed, temperature=0.9, top_p=0.8):
+        cbe = ContinuousBatchingEngine(m, params, n_slots=2, max_len=MAX_LEN)
+        rid = cbe.submit(prompt, 6, temperature=temperature, top_p=top_p,
+                         seed=seed)
+        return cbe.run()[rid].tokens
+
+    a, b = run(7), run(7)
+    np.testing.assert_array_equal(a, b)                  # same seed, same tokens
+    # a vanishing top-p keeps only the argmax: degenerates to greedy
+    greedy = _sequential_tokens(m, params, [(prompt, 6)])[0]
+    np.testing.assert_array_equal(run(3, temperature=1.0, top_p=1e-9),
+                                  greedy)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(m, params, n_slots=1, max_len=MAX_LEN
+                                 ).submit(prompt, 2, temperature=-1.0)
+
+
+def test_sample_token_top_p_filters_tail():
+    logits = np.log(np.asarray([0.5, 0.3, 0.15, 0.05]))
+    # top_p=0.6 keeps {0, 1}; every draw must come from that set
+    draws = {sample_token(logits, 1.0, 0.6, seed, step)
+             for seed in range(20) for step in range(3)}
+    assert draws <= {0, 1} and 0 in draws
+
+
+# ---------------------------------------------------------------------------
+# length-bucketed measured oracle
+# ---------------------------------------------------------------------------
+
+def test_measured_service_times_interpolates_buckets():
+    mst = MeasuredServiceTimes({
+        "fn": {"warm": [(8, 0.010), (32, 0.034)], "fork": 0.200},
+    }, measured_prompt_len=8)
+    assert mst.service_s("fn", "warm", 8) == pytest.approx(0.010)
+    assert mst.service_s("fn", "warm", 32) == pytest.approx(0.034)
+    assert mst.service_s("fn", "warm", 20) == pytest.approx(0.022)
+    # clamped outside the measured range
+    assert mst.service_s("fn", "warm", 4) == pytest.approx(0.010)
+    assert mst.service_s("fn", "warm", 100) == pytest.approx(0.034)
+    # single-bucket kinds and the flat float form still answer
+    assert mst.service_s("fn", "warm") == pytest.approx(0.010)
+    assert mst.service_s("fn", "fork", 999) == pytest.approx(0.200)
+    assert mst.service_s("fn", "cold") is None
+    assert mst.service_s("nope", "warm") is None
+    assert "warm=10.0ms@8/34.0ms@32" in mst.summary()

@@ -201,6 +201,89 @@ def test_serving_mesh_axes_validated():
         FaaSRuntime(mesh=bad)
 
 
+def test_sharded_prefix_reuse_parity():
+    """Prefix KV reuse on the mesh: the baked prefix pages live in the
+    page-replicated / heads-sharded arena, suffix-only prefill runs under
+    GSPMD, and tokens stay identical to the single-device sequential
+    Engine with full prefill."""
+    import jax.numpy as jnp
+
+    from repro.runtime.continuous import sharded_serve_fns
+    from repro.runtime.kv_pool import PagedKVCachePool
+    from repro.runtime.prefix import PrefixIndex
+
+    m = get_smoke_model("smollm-135m", n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(13)
+    prefix = rng.integers(0, m.cfg.vocab_size, 10).astype(np.int32)
+    reqs = [(np.concatenate([prefix, rng.integers(
+        0, m.cfg.vocab_size, s).astype(np.int32)]), n)
+        for s, n in [(4, 5), (6, 3)]]
+    want = _sequential_tokens(m, params, reqs)
+
+    plan = _tp_plan()
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=4,
+                            plan=plan)
+    prefill_fn, prefill_from_fn, decode_fn = sharded_serve_fns(m, pool, plan)
+    sp = jax.device_put(params, plan.param_shardings(m))
+    cache = m.make_cache(1, pool.padded_len)
+    cache = jax.device_put(cache, plan.cache_shardings(m, cache))
+    _, cache = prefill_fn(sp, {"tokens": jnp.asarray(prefix[None, :])},
+                          cache)
+    handle = pool.bake_prefix(cache, prefix)
+    assert any(_is_distributed(l) for l in jax.tree.leaves(pool.cache))
+    index = PrefixIndex(4)
+    index.register(handle)
+
+    fresh0 = pool.stats["fresh_pages_mapped"]
+    cbe = ContinuousBatchingEngine(m, sp, max_len=MAX_LEN, plan=plan,
+                                   pool=pool, prefill_fn=prefill_fn,
+                                   prefill_from_fn=prefill_from_fn,
+                                   decode_fn=decode_fn, prefix_index=index)
+    rids = [cbe.submit(p, n) for p, n in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+        assert out[rid].reused_prefix_len == 10
+    # both requests aliased the prefix's 2 full pages instead of mapping
+    # fresh ones (the COW copy of the partial tail is 1 fresh page each)
+    assert pool.stats["shared_pages_mapped"] == 2 * 2
+    assert pool.prefix_page_refs(handle)[0] == 1         # all returned
+    fresh = pool.stats["fresh_pages_mapped"] - fresh0
+    full_blocks = sum(pool.blocks_for(len(p) + n) for p, n in reqs)
+    assert fresh < full_blocks
+
+
+def test_faas_mesh_template_prefix_bakes_per_instance(mesh_runtime):
+    """A function deployed with a template prompt bakes its prefix on the
+    default instance at deploy and lazily on other mesh slices at first
+    fork there — each arena pins its own copy exactly once."""
+    m, params, rt = mesh_runtime
+    rng = np.random.default_rng(9)
+    template = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    rt.evict()
+    rt.deploy(tidal.static_function("fn-tpl", m, params), {}, prewarm_seq=8,
+              template_prompt=template)
+    assert ("fn-tpl", 0) in rt._prefix_handles
+    prompt = np.concatenate(
+        [template, rng.integers(0, m.cfg.vocab_size, 4).astype(np.int32)])
+    want = Engine(m, params, donate_cache=False).generate(
+        prompt[None], max_new_tokens=3, cache_len=MAX_LEN).tokens[0]
+    r = rt.submit("fn-tpl", {}, prompt, 3)
+    np.testing.assert_array_equal(r.tokens, want)
+    inst = {w.instance for k, w in rt._engines.items()
+            if k[0] == "fn-tpl"}.pop()
+    assert ("fn-tpl", inst) in rt._prefix_handles        # baked where placed
+    handle = rt._prefix_handles[("fn-tpl", inst)]
+    assert handle.pool.prefix_page_refs(handle) == [1]   # 1 page, pinned once
+    rt.evict()
+    n_baked = sum(1 for k in rt._prefix_handles if k[0] == "fn-tpl")
+    assert rt.release_template_prefix("fn-tpl") == n_baked >= 1
+    for pool in rt._pools.values():
+        if hasattr(pool, "n_free_pages"):
+            assert pool.n_free_pages == pool.n_pages - 1
+
+
 def test_sharded_prefill_entry_points_carry_shardings():
     """The shared serve fns are built with explicit in/out shardings: a
     decode step keeps the arena's NamedSharding across donation."""
