@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.fig19_traces",
     "benchmarks.fig20_order_overhead",
     "benchmarks.fig21_prefix_reuse",
+    "benchmarks.fig_p95_ttft",
     "benchmarks.table3_merging",
     "benchmarks.roofline_table",
 ]

@@ -48,6 +48,9 @@ class SimRequest:
     arrival_s: float
     input_len: int
     req_id: int = 0
+    # per-request queueing budget (the live gateway's deadline_s): a
+    # request still queued past it is SHED without consuming service
+    deadline_s: Optional[float] = None
 
 
 def make_trace(fn_rates: dict, duration_s: float, fn_tasks: dict,
@@ -97,9 +100,10 @@ class RequestResult:
     ttft_s: float                # includes queueing
     service_s: float
     queue_s: float
-    kind: str                    # 'warm' | 'fork' | 'cold'
+    kind: str                    # 'warm' | 'fork' | 'cold' | 'shed'
     rejected: bool = False
     hedged: bool = False
+    shed: bool = False           # deadline expired while queued
 
 
 @dataclasses.dataclass
@@ -248,6 +252,13 @@ class ClusterSim:
                 out.append(RequestResult(req, cfg.timeout_s, 0.0, queue,
                                          "cold", rejected=True, hedged=hedged))
                 continue
+            if req.deadline_s is not None and queue > req.deadline_s:
+                # deadline shed: the request leaves the queue having
+                # consumed NO service (mirrors the live gateway, which
+                # sheds before prefill) — the queue behind it shortens
+                out.append(RequestResult(req, req.deadline_s, 0.0, queue,
+                                         "shed", shed=True, hedged=hedged))
+                continue
 
             is_warm = (req.fn_name in gpu.warm
                        and gpu.warm[req.fn_name][0] > start)
@@ -283,6 +294,7 @@ def summarize(results: list) -> dict:
     return {
         "n": len(results),
         "rejected": sum(r.rejected for r in results),
+        "shed": sum(r.shed for r in results),
         "cold": sum(r.kind == "cold" and not r.rejected for r in results),
         "warm": sum(r.kind == "warm" for r in results),
         "fork": sum(r.kind == "fork" for r in results),

@@ -8,7 +8,12 @@
   prefix      — PrefixIndex: page-granular token-hash chain matching
                 incoming prompts to cached prompt-prefix KV
   continuous  — continuous-batching engine (admission queue + step loop,
-                suffix-only prefill on prefix hits, temperature/top-p)
+                suffix-only prefill on prefix hits, temperature/top-p,
+                per-token callbacks, deadline shed, cancel, quantum-
+                bounded stepping)
+  gateway     — async invocation gateway: InvocationRequest tickets,
+                streaming InvocationHandles, deadline-aware interleaved
+                engine scheduling in bounded quanta
   faas        — FaaSRuntime front-end over TemplateServer + prewarm +
                 continuous batching with template-baked prompt caches,
                 plus length-bucketed measured service-time oracles for
@@ -21,15 +26,20 @@ from repro.runtime.continuous import (ContinuousBatchingEngine, Request,
 from repro.runtime.engine import (Engine, GenerationResult, sample_greedy,
                                   sample_token)
 from repro.runtime.faas import (FaaSRuntime, MeasuredServiceTimes,
-                                SubmitResult, measure_service_times)
+                                measure_service_times)
+from repro.runtime.gateway import (DeadlineExceeded, InvocationCancelled,
+                                   InvocationGateway, InvocationHandle,
+                                   InvocationRequest, SubmitResult)
 from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
                                    PoolExhausted, PrefixHandle)
 from repro.runtime.prefix import PrefixIndex
 
 __all__ = [
-    "ContinuousBatchingEngine", "Engine", "FaaSRuntime", "GenerationResult",
-    "KVCachePool", "MeasuredServiceTimes", "PagedKVCachePool",
-    "PoolExhausted", "PrefixHandle", "PrefixIndex", "Request",
-    "RequestOutput", "ShardingPlan", "SubmitResult", "measure_service_times",
+    "ContinuousBatchingEngine", "DeadlineExceeded", "Engine", "FaaSRuntime",
+    "GenerationResult", "InvocationCancelled", "InvocationGateway",
+    "InvocationHandle", "InvocationRequest", "KVCachePool",
+    "MeasuredServiceTimes", "PagedKVCachePool", "PoolExhausted",
+    "PrefixHandle", "PrefixIndex", "Request", "RequestOutput",
+    "ShardingPlan", "SubmitResult", "measure_service_times",
     "sample_greedy", "sample_token", "serving_plan", "sharded_serve_fns",
 ]

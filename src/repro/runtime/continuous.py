@@ -104,6 +104,9 @@ class Request:
     temperature: float = 0.0         # 0 = greedy (bit-parity reference)
     top_p: float = 1.0
     seed: int = 0                    # per-request sampling seed
+    deadline_s: Optional[float] = None  # shed if still QUEUED past this
+    priority: int = 0                # higher admits first (FIFO within)
+    token_cb: Optional[Callable] = None  # (req_id, token, index) per emit
     # prefix-reuse match, resolved lazily at first admission check and
     # cached ((handle, reuse_len) or None); _UNMATCHED = not yet looked up
     prefix_hit: Any = _UNMATCHED
@@ -119,6 +122,8 @@ class RequestOutput:
     e2e_s: float                     # submit -> retirement
     streamed_prefill: bool = False   # admitted while weights were in flight
     reused_prefix_len: int = 0       # prompt tokens served from shared pages
+    status: str = "done"             # 'done' | 'cancelled' | 'shed' | 'failed'
+    error: Optional[str] = None      # set for 'failed' (unservable) requests
 
 
 @dataclasses.dataclass
@@ -151,7 +156,8 @@ class ContinuousBatchingEngine:
                  n_pages: Optional[int] = None,
                  plan: Optional[ShardingPlan] = None,
                  pool: Optional[Any] = None,
-                 prefix_index: Optional[Any] = None):
+                 prefix_index: Optional[Any] = None,
+                 bucket_suffix: bool = False):
         if model.is_encdec:
             raise NotImplementedError(
                 "continuous batching needs per-slot decode positions; the "
@@ -227,6 +233,10 @@ class ContinuousBatchingEngine:
         # per-function prefix index: admission matches each prompt against
         # the baked/cached prefixes and serves the hit from shared pages
         self.prefix_index = prefix_index
+        # round suffix-prefill lengths up to the next page multiple (by
+        # shrinking the reuse) so every hit lands on a pre-compilable
+        # bucket instead of a per-length lazy jit trace
+        self.bucket_suffix = bucket_suffix
         # per-slot feedback state (free slots decode position 0 / token 0;
         # their logits are computed and discarded)
         self._tok = np.zeros((n_slots, 1), np.int32)
@@ -252,13 +262,22 @@ class ContinuousBatchingEngine:
     def submit(self, prompt, max_new_tokens: int = 8,
                submit_s: Optional[float] = None,
                temperature: float = 0.0, top_p: float = 1.0,
-               seed: int = 0) -> int:
+               seed: int = 0, deadline_s: Optional[float] = None,
+               priority: int = 0,
+               token_cb: Optional[Callable] = None) -> int:
         """Enqueue one request.  ``submit_s`` backdates the arrival stamp so
         work done on the request's behalf before enqueueing (forking this
         engine's session, say) counts toward its TTFT.  ``temperature=0``
         decodes greedily (the bit-parity reference); otherwise tokens are
         drawn temperature/top-p with a per-request ``seed`` (deterministic
-        across runs and engines)."""
+        across runs and engines).
+
+        ``deadline_s`` is a queueing budget relative to ``submit_s``: a
+        request still queued when it expires is SHED (status ``'shed'``,
+        no prefill consumed) instead of admitted late.  ``priority`` ranks
+        admission (higher first, FIFO within a rank).  ``token_cb`` is
+        called as ``token_cb(req_id, token, index)`` the moment each token
+        is sampled — the gateway's streaming bridge."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
@@ -281,8 +300,29 @@ class ContinuousBatchingEngine:
         self.queue.append(Request(rid, prompt, max_new_tokens,
                                   submit_s or time.perf_counter(),
                                   temperature=temperature, top_p=top_p,
-                                  seed=seed))
+                                  seed=seed, deadline_s=deadline_s,
+                                  priority=priority, token_cb=token_cb))
         return rid
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel one request wherever it is in its lifecycle.
+
+        Queued: removed without ever prefilling.  Active: the slot retires
+        mid-flight — its pages (including aliased shared-prefix pages)
+        return to the pool refcount-safely via the normal release path —
+        and the tokens emitted so far are kept in the ``'cancelled'``
+        result.  Returns False when the request already finished (or was
+        never submitted here): too late to cancel."""
+        for req in self.queue:
+            if req.req_id == req_id:
+                self.queue.remove(req)
+                self._record_dropped(req, "cancelled")
+                return True
+        for slot, st in list(self.active.items()):
+            if st.req.req_id == req_id:
+                self._retire(slot, status="cancelled")
+                return True
+        return False
 
     # ------------------------------------------------------------------
     def _prefix_hit(self, req: Request):
@@ -294,6 +334,18 @@ class ContinuousBatchingEngine:
             req.prefix_hit = None
             if self.paged and self.prefix_index is not None:
                 req.prefix_hit = self.prefix_index.match(req.prompt)
+            if req.prefix_hit is not None and self.bucket_suffix:
+                # shrink the reuse so the suffix length lands on a page
+                # multiple: the handful of re-prefilled cached tokens is
+                # far cheaper than a per-length lazy compile of
+                # ``prefill_from`` (the deploy prewarm covers exactly the
+                # page-multiple buckets)
+                handle, reuse = req.prefix_hit
+                ps = self.pool.page_size
+                pad = (reuse - len(req.prompt)) % ps
+                if pad:
+                    reuse -= pad
+                    req.prefix_hit = (handle, reuse) if reuse >= 1 else None
         if req.prefix_hit is not None and not req.prefix_hit[0].pinned:
             req.prefix_hit = None            # stale handle: full prefill
         return req.prefix_hit
@@ -304,6 +356,37 @@ class ContinuousBatchingEngine:
             return self.pool.can_admit(len(req.prompt) + req.max_new_tokens,
                                        reuse_len=hit[1] if hit else 0)
         return bool(self.pool.n_free)
+
+    def _record_dropped(self, req: Request, status: str,
+                        error: Optional[str] = None) -> None:
+        """Result for a request that never reached (or left) a slot."""
+        elapsed = time.perf_counter() - req.submit_s
+        self.results[req.req_id] = RequestOutput(
+            req_id=req.req_id, tokens=np.zeros(0, np.int32),
+            prompt_len=len(req.prompt), n_generated=0,
+            ttft_s=elapsed, e2e_s=elapsed, status=status, error=error)
+
+    def _shed_expired(self, now: float) -> None:
+        """Deadline-expired QUEUED requests are shed — a typed terminal
+        status instead of a late prefill nobody is waiting for (in-flight
+        requests are never shed: their prefill is already spent)."""
+        for req in [r for r in self.queue if r.deadline_s is not None
+                    and now - r.submit_s > r.deadline_s]:
+            self.queue.remove(req)
+            self._record_dropped(req, "shed")
+
+    def _queue_head(self) -> Request:
+        """Admission order: highest priority first, FIFO within a rank."""
+        return max(self.queue, key=lambda r: (r.priority, -r.req_id))
+
+    def _next_admission(self) -> Optional[Request]:
+        """The queue head if it fits now.  The head BLOCKS lower ranks
+        while it does not fit (no bypass: a stream of small requests must
+        not starve a large one)."""
+        if not self.queue:
+            return None
+        head = self._queue_head()
+        return head if self._can_admit(head) else None
 
     def _sample_first(self, req: Request, logits) -> int:
         if req.temperature <= 0:
@@ -363,10 +446,12 @@ class ContinuousBatchingEngine:
                      streamed=streamed, ttft_s=ttft,
                      reused_prefix_len=reuse)
         self.active[slot] = st
+        if req.token_cb is not None:
+            req.token_cb(req.req_id, first, 0)
         if len(st.tokens) >= req.max_new_tokens:
             self._retire(slot)
 
-    def _retire(self, slot: int) -> None:
+    def _retire(self, slot: int, status: str = "done") -> None:
         st = self.active.pop(slot)
         self.pool.release(slot)
         self._tok[slot, 0] = 0
@@ -379,7 +464,8 @@ class ContinuousBatchingEngine:
             ttft_s=st.ttft_s,
             e2e_s=time.perf_counter() - st.req.submit_s,
             streamed_prefill=st.streamed,
-            reused_prefix_len=st.reused_prefix_len)
+            reused_prefix_len=st.reused_prefix_len,
+            status=status)
 
     # ------------------------------------------------------------------
     def _foreign_slots(self) -> int:
@@ -406,8 +492,13 @@ class ContinuousBatchingEngine:
                     f"shared KV pool: {foreign} slot(s) held by another "
                     "engine; drain or evict it before decoding here "
                     "(engines borrow the arena exclusively)")
-        while self.queue and self._can_admit(self.queue[0]):
-            self._admit(self.queue.popleft())
+        self._shed_expired(time.perf_counter())
+        while True:
+            head = self._next_admission()
+            if head is None:
+                break
+            self.queue.remove(head)
+            self._admit(head)
         if not self.active:
             if self.queue:
                 # the pool is completely idle (no active slots here, no
@@ -416,12 +507,18 @@ class ContinuousBatchingEngine:
                 # it — only pinned prefix pages occupy the arena — so
                 # looping would livelock.  Drop the doomed request (the
                 # queue behind it stays servable) and surface the error.
-                head = self.queue.popleft()
-                raise PoolExhausted(
+                head = self._queue_head()
+                self.queue.remove(head)
+                msg = (
                     f"request {head.req_id} needs more KV pages than the "
                     "idle arena can ever free (pinned prefix pages shrink "
                     "attainable capacity); use a larger arena or release "
                     "template prefixes")
+                # a 'failed' result terminates any gateway handle waiting
+                # on the dropped request; the raise surfaces the error to
+                # whoever is driving the step loop
+                self._record_dropped(head, "failed", error=msg)
+                raise PoolExhausted(msg)
             return False
         if self.paged:
             # crossing a page boundary this step maps one more page
@@ -450,12 +547,25 @@ class ContinuousBatchingEngine:
                                          len(st.tokens))
         for slot in list(self.active):
             st = self.active[slot]
-            st.tokens.append(int(nxt[slot]))
-            self._tok[slot, 0] = int(nxt[slot])
+            tok = int(nxt[slot])
+            st.tokens.append(tok)
+            self._tok[slot, 0] = tok
             self._pos[slot] += 1
+            if st.req.token_cb is not None:
+                st.req.token_cb(st.req.req_id, tok, len(st.tokens) - 1)
             if len(st.tokens) >= st.req.max_new_tokens:
                 self._retire(slot)
         return bool(self.queue or self.active)
+
+    def step_n(self, n: int) -> bool:
+        """Up to ``n`` steps — the gateway's scheduling quantum.  Between
+        calls the engine yields control holding everything it has (slots,
+        pages, queue): a quantum boundary is a scheduling point, not a
+        release point.  Returns False once fully drained."""
+        for _ in range(max(1, n)):
+            if not self.step():
+                return False
+        return True
 
     def run(self) -> dict:
         """Drain queue + active set; returns {req_id: RequestOutput}."""
@@ -468,12 +578,13 @@ class ContinuousBatchingEngine:
         pages to a paged pool) and drop queued requests.  The keep-alive
         eviction path — an engine sharing a runtime-owned pool must hand
         its slots back before it is dropped, or the arena leaks.  Returns
-        the number of abandoned requests; completed results are kept."""
+        the number of abandoned requests; completed results are kept and
+        abandoned ones record a ``'cancelled'`` result (so a gateway
+        handle waiting on them terminates instead of polling forever)."""
         n = len(self.active) + len(self.queue)
         for slot in list(self.active):
-            self.active.pop(slot)
-            self.pool.release(slot)
-            self._tok[slot, 0] = 0
-            self._pos[slot] = 0
+            self._retire(slot, status="cancelled")
+        for req in list(self.queue):
+            self._record_dropped(req, "cancelled")
         self.queue.clear()
         return n

@@ -90,7 +90,12 @@ class Engine:
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 16,
                  frames: Optional[np.ndarray] = None,
                  greedy: bool = True, seed: int = 0,
-                 cache_len: Optional[int] = None) -> GenerationResult:
+                 cache_len: Optional[int] = None,
+                 on_token: Optional[Callable] = None) -> GenerationResult:
+        """``on_token(tokens, index)`` — called with each sampled [B]
+        token batch as it is produced: the sequential path's streaming
+        hook, mirroring the continuous engine's per-request ``token_cb``
+        so reference comparisons can stream too."""
         B, S = prompts.shape
         cache_len = cache_len or (S + max_new_tokens)
         cache = self.model.make_cache(B, cache_len)
@@ -106,6 +111,8 @@ class Engine:
         ttft = time.perf_counter() - t0
 
         out = [np.asarray(tok)]
+        if on_token is not None:
+            on_token(out[0], 0)
         rng = jax.random.PRNGKey(seed)
         t1 = time.perf_counter()
         # In the decoder-only case positions continue after the prompt;
@@ -121,6 +128,8 @@ class Engine:
                 rng, sub = jax.random.split(rng)
                 tok = sample_temperature(logits, sub)
             out.append(np.asarray(tok))
+            if on_token is not None:
+                on_token(out[-1], i)
         jax.block_until_ready(tok)
         decode_s = time.perf_counter() - t1
         return GenerationResult(

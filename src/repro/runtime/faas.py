@@ -1,5 +1,11 @@
-"""FaaS front-end: one ``submit(fn_name, event, prompt)`` API over the full
-TIDAL stack.
+"""FaaS front-end over the full TIDAL stack.
+
+The front door is the async gateway: ``submit(InvocationRequest)``
+returns an :class:`~repro.runtime.gateway.InvocationHandle` ticket
+(stream ``tokens()``, block ``result()``, abort ``cancel()``); the
+legacy ``submit(fn_name, event, prompt)`` / ``submit_many(tuples)``
+forms are thin compat shims over the same gateway with bit-identical
+greedy results.
 
 Composes the pieces the launch scripts used to glue together by hand:
 
@@ -36,7 +42,6 @@ the least-loaded instance by more than ``locality_max_extra_load``.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -47,27 +52,17 @@ from jax.sharding import Mesh
 from repro.core import api as tidal
 from repro.core.api import LLMFunction
 from repro.core.prewarm import ExecutableCache, ProcessPool
-from repro.core.template_server import ForkStats, TemplateServer
+from repro.core.template_server import TemplateServer
 from repro.distributed.sharding import ShardingPlan, serving_plan
 from repro.models.registry import get_smoke_model
 from repro.runtime.continuous import (ContinuousBatchingEngine,
                                       sharded_serve_fns)
+from repro.runtime.gateway import (InvocationGateway, InvocationHandle,
+                                   InvocationRequest, SubmitResult)
 from repro.runtime.kv_pool import KVCachePool, PagedKVCachePool
 from repro.runtime.prefix import PrefixIndex
 
 KINDS = ("warm", "fork", "cold")
-
-
-@dataclasses.dataclass
-class SubmitResult:
-    req_id: int
-    fn_name: str
-    kind: str                        # 'warm' | 'fork' | 'cold'
-    tokens: np.ndarray               # [n_generated] int32
-    ttft_s: float
-    e2e_s: float
-    streamed_prefill: bool = False
-    fork_stats: Optional[ForkStats] = None
 
 
 def _engine_key(fn_name: str, event: dict) -> tuple:
@@ -97,7 +92,8 @@ class FaaSRuntime:
                  prewarm: bool = True, pool_workers: int = 2,
                  trace_seq: int = 32, page_size: int = 8,
                  mesh: Optional[Mesh] = None,
-                 locality_max_extra_load: int = 2):
+                 locality_max_extra_load: int = 2,
+                 gateway_quantum: int = 2):
         self.mesh = mesh
         self.locality_max_extra_load = locality_max_extra_load
         self.instances = self._make_instances(mesh)
@@ -130,6 +126,9 @@ class FaaSRuntime:
         self._prefix_handles: dict[tuple, object] = {}
         self._prefix_indexes: dict[tuple, PrefixIndex] = {}
         self._baked_events: dict[str, dict] = {}
+        # the async front door: submit() tickets route through this loop;
+        # the legacy tuple APIs are thin compat shims over it
+        self.gateway = InvocationGateway(self, quantum=gateway_quantum)
 
     @staticmethod
     def _make_instances(mesh: Optional[Mesh]) -> list:
@@ -257,6 +256,8 @@ class FaaSRuntime:
         if self.prewarm and not fn.model.is_encdec:
             self._fn_keys[fn.name] = self._prewarm_engine_fns(fn,
                                                               prewarm_seq)
+            if template_prompt is not None:
+                self._fn_keys[fn.name] += self._prewarm_suffix_fns(fn)
             self.workers.prewarm_for_functions(self._fn_keys)
 
     # ------------------------------------------------------------------
@@ -399,6 +400,53 @@ class FaaSRuntime:
             keys += [kp, kd]
         return keys
 
+    def _prewarm_suffix_fns(self, fn: LLMFunction) -> list:
+        """Pre-compile the suffix-only prefill at every PAGE-MULTIPLE
+        suffix length.  The engine buckets each reuse hit onto exactly
+        these shapes (``bucket_suffix``: the reuse shrinks by up to a
+        page so the suffix rounds up to a page multiple), so a
+        reused-prefix invocation's first hit pays forking, never a lazy
+        per-length compile.  ``offset`` is traced — one executable per
+        bucket covers every reuse length."""
+        model = fn.model
+        if not model.supports_paged_kv:
+            return []
+        ps = self.page_size
+        bps = -(-self.max_len // ps)
+        padded = bps * ps
+        keys = []
+
+        def zero_params(plan):
+            params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  model.init_params(abstract=True))
+            if plan is not None:
+                params = jax.device_put(params, plan.param_shardings(model))
+            return params
+
+        for inst in self.instances:
+            prefill_from = self._serve_fns_for(fn.name, inst)[1]
+            if prefill_from is None:
+                continue
+            for k in range(1, bps + 1):
+                slen = k * ps
+                key = (id(model), "prefill-from", inst.idx, slen,
+                       self.max_len)
+
+                def warm(inst=inst, prefill_from=prefill_from, slen=slen):
+                    params = zero_params(inst.plan)
+                    cache = model.make_cache(1, padded)
+                    if inst.plan is not None:
+                        cache = jax.device_put(
+                            cache, inst.plan.cache_shardings(model, cache))
+                    toks = jnp.zeros((1, slen), jnp.int32)
+                    jax.block_until_ready(
+                        prefill_from(params, toks, cache, jnp.int32(0)))
+                    return prefill_from
+
+                self.exe_cache.get_or_compile(key, warm)
+                keys.append(key)
+        return keys
+
     # ------------------------------------------------------------------
     def warm_engines(self) -> list:
         return sorted(self._engines)
@@ -421,11 +469,19 @@ class FaaSRuntime:
         return len(keys)
 
     def _prune(self, now: float) -> None:
-        for k in [k for k, w in self._engines.items()
-                  if now - w.last_used_s > self.keep_alive_s]:
+        """Keep-alive expiry + LRU cap — IDLE engines only: an engine with
+        queued/active gateway requests is serving someone's ticket, and
+        dropping it would spuriously cancel them (``evict()`` remains the
+        explicit force-drop)."""
+        idle = [k for k, w in self._engines.items()
+                if not w.engine.n_pending]
+        for k in [k for k in idle
+                  if now - self._engines[k].last_used_s > self.keep_alive_s]:
+            idle.remove(k)
             self._drop_engine(k)
-        while len(self._engines) > self.max_warm_engines:
-            oldest = min(self._engines, key=lambda k: self._engines[k].last_used_s)
+        while len(self._engines) > self.max_warm_engines and idle:
+            oldest = min(idle, key=lambda k: self._engines[k].last_used_s)
+            idle.remove(oldest)
             self._drop_engine(oldest)
 
     # ------------------------------------------------------------------
@@ -475,7 +531,8 @@ class FaaSRuntime:
             prefill_fn=prefill_fn, decode_fn=decode_fn,
             prefill_from_fn=prefill_from_fn,
             page_size=self.page_size, plan=inst.plan,
-            pool=self._pool_for(inst, model))
+            pool=self._pool_for(inst, model),
+            bucket_suffix=True)
         # a lazy per-instance bake reuses THIS fork's params rather than
         # streaming the model a second time (params_fn only resolves —
         # blocking on the stream — when a bake actually happens here)
@@ -485,52 +542,68 @@ class FaaSRuntime:
         self._invoked.add(fn_name)
         return key, engine, kind, stats
 
-    def submit(self, fn_name: str, event: Optional[dict], prompt,
-               max_new_tokens: int = 8) -> SubmitResult:
-        """Invoke a deployed function on one prompt and drain the engine."""
-        return self.submit_many([(fn_name, event, prompt, max_new_tokens)])[0]
+    def _validate(self, fn_name: str, prompt, max_new_tokens: int) -> None:
+        """Reject what could never serve before it touches any engine."""
+        if fn_name not in self.functions:
+            raise KeyError(f"function {fn_name!r} is not deployed")
+        plen = len(np.asarray(prompt).reshape(-1))
+        if max_new_tokens < 1 or plen + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"{fn_name}: prompt({plen}) + max_new({max_new_tokens}) "
+                f"exceeds runtime max_len={self.max_len}")
+
+    def submit(self, request, event: Optional[dict] = None, prompt=None,
+               max_new_tokens: int = 8, *, temperature: float = 0.0,
+               top_p: float = 1.0, seed: int = 0):
+        """Invoke a deployed function.
+
+        The async form takes an :class:`InvocationRequest` and returns an
+        :class:`InvocationHandle` ticket immediately — stream with
+        ``handle.tokens()``, block with ``handle.result()``, abort with
+        ``handle.cancel()``.
+
+        The legacy positional form ``submit(fn_name, event, prompt,
+        max_new_tokens, temperature=..., top_p=..., seed=...)`` stays: it
+        is a compat shim that submits through the same gateway and drains
+        it, returning the :class:`SubmitResult` (bit-identical tokens)."""
+        if isinstance(request, InvocationRequest):
+            return self.gateway.submit(request)
+        return self.submit_many([(request, event, prompt, max_new_tokens,
+                                  temperature, top_p, seed)])[0]
+
+    def submit_async(self, request: InvocationRequest) -> InvocationHandle:
+        """Explicitly-named alias of the async ``submit`` form."""
+        return self.gateway.submit(request)
 
     def submit_many(self, requests: list) -> list:
-        """Batch entry: ``requests`` is a list of (fn_name, event, prompt,
-        max_new_tokens) tuples.  All requests are enqueued BEFORE any engine
-        drains, so requests resolving to the same engine genuinely share
-        decode batches (continuous batching through the public API)."""
-        now = time.perf_counter()
-        self._prune(now)
+        """Batch compat shim over the gateway: ``requests`` is a list of
+        ``(fn_name, event, prompt, max_new_tokens[, temperature[, top_p[,
+        seed]]])`` tuples.  All requests are ticketed BEFORE any engine
+        steps, so requests resolving to the same engine genuinely share
+        decode batches, and the gateway interleaves engines in quanta; at
+        temperature 0 the tokens are bit-identical to the old
+        drain-to-completion order (decode is per-slot independent)."""
+        parsed = []
+        for req in requests:
+            fn_name, event, prompt, max_new_tokens = req[:4]
+            extra = tuple(req[4:])
+            temperature = extra[0] if len(extra) > 0 else 0.0
+            top_p = extra[1] if len(extra) > 1 else 1.0
+            seed = extra[2] if len(extra) > 2 else 0
+            parsed.append(InvocationRequest(
+                fn_name=fn_name, prompt=prompt, event=event,
+                max_new_tokens=max_new_tokens, temperature=temperature,
+                top_p=top_p, seed=seed))
         # validate the whole batch BEFORE touching any engine: a bad member
         # must not orphan earlier enqueues or misclassify first invocations
-        for fn_name, event, prompt, max_new_tokens in requests:
-            if fn_name not in self.functions:
-                raise KeyError(f"function {fn_name!r} is not deployed")
-            plen = len(np.asarray(prompt).reshape(-1))
-            if max_new_tokens < 1 or plen + max_new_tokens > self.max_len:
-                raise ValueError(
-                    f"{fn_name}: prompt({plen}) + max_new({max_new_tokens}) "
-                    f"exceeds runtime max_len={self.max_len}")
+        for r in parsed:
+            self._validate(r.fn_name, r.prompt, r.max_new_tokens)
 
         worker = self.workers.acquire()                      # §5.1 pool
         try:
-            pending = []                                     # enqueue phase
-            for fn_name, event, prompt, max_new_tokens in requests:
-                t_req = time.perf_counter()  # before fork: TTFT includes it
-                key, engine, kind, stats = self._engine_for(fn_name, event,
-                                                            now)
-                rid = engine.submit(prompt, max_new_tokens, submit_s=t_req)
-                pending.append((key, engine, rid, fn_name, kind, stats))
-
-            drained: dict = {}                               # drain phase
-            results = []
-            for key, engine, rid, fn_name, kind, stats in pending:
-                if id(engine) not in drained:
-                    drained[id(engine)] = engine.run()
-                    self._engines[key].last_used_s = time.perf_counter()
-                out = drained[id(engine)].pop(rid)   # bound engine.results
-                self.server.observe_ttft(fn_name, out.ttft_s)  # Eq. 1
-                results.append(SubmitResult(
-                    req_id=rid, fn_name=fn_name, kind=kind,
-                    tokens=out.tokens, ttft_s=out.ttft_s, e2e_s=out.e2e_s,
-                    streamed_prefill=out.streamed_prefill, fork_stats=stats))
-            return results
+            handles = [self.gateway.submit(r) for r in parsed]
+            self.gateway.drain()
+            return [h.result() for h in handles]
         finally:
             if worker is not None:
                 self.workers.release(worker)

@@ -1,0 +1,405 @@
+"""Async invocation gateway: ticket-based request lifecycle over the
+continuous-batching engines.
+
+The synchronous front door (``FaaSRuntime.submit_many``) drains one engine
+to completion at a time, so a long decode on one function inflates
+time-to-first-token for every request queued behind it.  This module is
+the asynchronous redesign: ``submit(InvocationRequest)`` returns an
+:class:`InvocationHandle` ticket immediately, and the gateway's
+cooperative scheduling loop steps engines in bounded QUANTA, interleaving
+across functions/instances so a short warm request admitted behind a
+long-running function still gets a fast first token.
+
+Request lifecycle::
+
+    queued ──> admitted ──> streaming ──> done
+       │            │            │
+       │ deadline   └── cancel ──┴──> cancelled
+       └──────────> shed   (typed DeadlineExceeded, no prefill spent)
+
+Scheduling respects the EXCLUSIVE-ARENA rule: a batched decode touches
+every slot of a shared KV pool, so an engine holding active slots owns its
+arena outright.  At a quantum boundary the engine yields *control* —
+releasing nothing: its slots, pages and queue ride through — and the
+gateway hands the next quantum to an engine on a *different* arena.
+Engines sharing one arena serialize at request granularity (the owner
+keeps stepping until its active set drains); engines on disjoint arenas
+(different models, different mesh instances) genuinely interleave.
+
+Everything is cooperative and single-threaded: ``tokens()`` / ``result()``
+pump the gateway while they wait, so no thread ever races the JAX runtime.
+Greedy results are bit-identical to the drain-to-completion path — the
+per-slot position vectors make each request's decode independent of batch
+composition — which is what lets ``submit``/``submit_many`` stay thin
+compat shims over this gateway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.template_server import ForkStats
+from repro.runtime.kv_pool import PoolExhausted
+
+# lifecycle states
+QUEUED = "queued"
+ADMITTED = "admitted"
+STREAMING = "streaming"
+DONE = "done"
+CANCELLED = "cancelled"
+SHED = "shed"
+FAILED = "failed"
+TERMINAL = (DONE, CANCELLED, SHED, FAILED)
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's queueing deadline expired before admission: it was
+    shed without consuming prefill."""
+
+
+class InvocationCancelled(RuntimeError):
+    """The invocation was cancelled before producing any token."""
+
+
+@dataclasses.dataclass
+class InvocationRequest:
+    """One asynchronous invocation of a deployed function."""
+    fn_name: str
+    prompt: Any                          # int32 token ids, any array-like
+    event: Optional[dict] = None
+    max_new_tokens: int = 8
+    temperature: float = 0.0             # 0 = greedy (bit-parity reference)
+    top_p: float = 1.0
+    seed: int = 0
+    deadline_s: Optional[float] = None   # queueing budget; expired => shed
+    priority: int = 0                    # higher admits first
+    # open-loop replay: backdate the arrival to this perf_counter stamp so
+    # TTFT/deadlines count from the INTENDED arrival, not the submit call
+    arrival_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class SubmitResult:
+    """Terminal record of one invocation (also the compat-shim return)."""
+    req_id: int
+    fn_name: str
+    kind: str                        # 'warm' | 'fork' | 'cold'
+    tokens: np.ndarray               # [n_generated] int32
+    ttft_s: float
+    e2e_s: float
+    streamed_prefill: bool = False
+    fork_stats: Optional[ForkStats] = None
+    reused_prefix_len: int = 0
+    status: str = DONE               # 'done' | 'cancelled'
+
+
+class InvocationHandle:
+    """Ticket for one in-flight invocation.
+
+    ``tokens()`` streams tokens as the engine emits them, ``result()``
+    blocks (cooperatively pumping the gateway) until the terminal state,
+    and ``cancel()`` retires the request wherever it is.  The handle never
+    spins: waiting drives the gateway's scheduling loop.
+    """
+
+    def __init__(self, gateway: "InvocationGateway",
+                 request: InvocationRequest, req_id: int, engine_key: tuple,
+                 engine, kind: str, fork_stats: Optional[ForkStats]):
+        self._gateway = gateway
+        self.request = request
+        self.req_id = req_id
+        self.engine_key = engine_key
+        self.engine = engine
+        self.kind = kind
+        self.fork_stats = fork_stats
+        self.submit_s = time.perf_counter()
+        self._state = QUEUED
+        self._tokens: list = []
+        self._output = None              # engine RequestOutput at terminal
+        self._result: Optional[SubmitResult] = None
+
+    # -- lifecycle ------------------------------------------------------
+    @property
+    def status(self) -> str:
+        return self._state
+
+    @property
+    def done(self) -> bool:
+        return self._state in TERMINAL
+
+    def cancel(self) -> bool:
+        """Retire the invocation now: a queued request is dropped before
+        any prefill; an in-flight one releases its slot and KV pages
+        (refcount-safely, including borrowed prefix pages).  Returns False
+        when the request already reached a terminal state."""
+        return self._gateway.cancel(self)
+
+    # -- consumption ----------------------------------------------------
+    def tokens(self):
+        """Per-token iterator bridging the engine's step loop: yields each
+        token as soon as it is sampled, pumping the gateway whenever no
+        token is buffered yet.  Ends at completion or cancellation (the
+        tokens emitted so far are all yielded); raises
+        :class:`DeadlineExceeded` if the request was shed."""
+        i = 0
+        while True:
+            while i < len(self._tokens):
+                yield self._tokens[i]
+                i += 1
+            if self.done:
+                if i < len(self._tokens):
+                    continue             # terminal flush appended more
+                self._raise_if_dead(allow_cancelled=True)
+                return
+            # pump only until the NEXT token lands (or the request
+            # terminates) — not until completion: that is what makes this
+            # a streaming iterator rather than a batch drain
+            self._gateway.pump(wait_for=self,
+                               until=lambda: len(self._tokens) > i)
+
+    def result(self, timeout: Optional[float] = None) -> SubmitResult:
+        """Pump the gateway until this invocation terminates and return
+        its :class:`SubmitResult` (status ``'cancelled'`` keeps the tokens
+        streamed before the cancel).  Raises :class:`DeadlineExceeded` for
+        shed requests, :class:`PoolExhausted` for unservable ones and
+        :class:`TimeoutError` when ``timeout`` elapses first."""
+        if not self._gateway.pump(wait_for=self, timeout=timeout):
+            raise TimeoutError(
+                f"invocation {self.req_id} ({self.request.fn_name}) still "
+                f"{self._state!r} after {timeout}s")
+        self._raise_if_dead(allow_cancelled=True)
+        return self._result
+
+    def _raise_if_dead(self, allow_cancelled: bool = False) -> None:
+        if self._state == SHED:
+            raise DeadlineExceeded(
+                f"invocation {self.req_id} ({self.request.fn_name}): "
+                f"deadline of {self.request.deadline_s}s expired while "
+                "queued; request was shed before prefill")
+        if self._state == FAILED:
+            raise PoolExhausted(self._output.error
+                                or f"invocation {self.req_id} unservable")
+        if self._state == CANCELLED and not allow_cancelled:
+            raise InvocationCancelled(
+                f"invocation {self.req_id} ({self.request.fn_name}) was "
+                "cancelled")
+
+    # -- gateway-side ---------------------------------------------------
+    def _on_token(self, req_id: int, token: int, index: int) -> None:
+        if index == 0:
+            self._state = STREAMING
+            # Eq. 1 TTFT feedback fires on token 0, not at batch drain:
+            # residency adapts while the request is still decoding
+            self._gateway.runtime.server.observe_ttft(
+                self.request.fn_name, time.perf_counter() - self.submit_s)
+        self._tokens.append(int(token))
+
+    def _finalize(self, out) -> None:
+        self._output = out
+        self._tokens = list(int(t) for t in out.tokens)
+        self._state = {"done": DONE, "cancelled": CANCELLED,
+                       "shed": SHED, "failed": FAILED}[out.status]
+        self._result = SubmitResult(
+            req_id=self.req_id, fn_name=self.request.fn_name, kind=self.kind,
+            tokens=np.asarray(out.tokens, np.int32), ttft_s=out.ttft_s,
+            e2e_s=out.e2e_s, streamed_prefill=out.streamed_prefill,
+            fork_stats=self.fork_stats,
+            reused_prefix_len=out.reused_prefix_len,
+            status=out.status if out.status != "failed" else CANCELLED)
+
+
+class InvocationGateway:
+    """Cooperative scheduling loop multiplexing engines under one runtime.
+
+    ``quantum`` bounds how many decode steps an engine runs before control
+    returns to the rotation (1 = finest interleaving, higher amortizes
+    dispatch overhead).  ``interleave=False`` degrades to the legacy
+    drain-to-completion order — the baseline the p95 benchmark gates
+    against.
+    """
+
+    def __init__(self, runtime, quantum: int = 2, interleave: bool = True):
+        self.runtime = runtime
+        self.quantum = quantum
+        self.interleave = interleave
+        self._live: list[InvocationHandle] = []
+        self._rr = 0                     # round-robin offset over engines
+
+    # -- intake ---------------------------------------------------------
+    def submit(self, request: InvocationRequest) -> InvocationHandle:
+        """Validate, resolve the serving engine (forking if no warm one
+        exists — the fork's weight stream overlaps later scheduling) and
+        enqueue.  Returns the ticket immediately; no decode work happens
+        until the gateway is pumped."""
+        now = (time.perf_counter() if request.arrival_s is None
+               else request.arrival_s)
+        rt = self.runtime
+        rt._prune(now)
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        rt._validate(request.fn_name, prompt, request.max_new_tokens)
+        key, engine, kind, stats = rt._engine_for(request.fn_name,
+                                                  request.event, now)
+        handle = InvocationHandle(self, request, -1, key, engine, kind,
+                                  stats)
+        handle.submit_s = now            # TTFT includes the fork above
+        handle.req_id = engine.submit(
+            prompt, request.max_new_tokens, submit_s=now,
+            temperature=request.temperature, top_p=request.top_p,
+            seed=request.seed, deadline_s=request.deadline_s,
+            priority=request.priority, token_cb=handle._on_token)
+        self._live.append(handle)
+        return handle
+
+    def cancel(self, handle: InvocationHandle) -> bool:
+        if handle.done:
+            return False
+        if handle.engine.cancel(handle.req_id):
+            self._collect(handle.engine)
+            return True
+        return False
+
+    # -- scheduling -----------------------------------------------------
+    def pump(self, wait_for: Optional[InvocationHandle] = None,
+             timeout: Optional[float] = None, until=None) -> bool:
+        """Run scheduling rounds until ``wait_for`` reaches a terminal
+        state (or, with None, until every live invocation drains).
+        ``until`` is an extra early-exit predicate — the streaming
+        iterator passes "one more token buffered".  Returns False only
+        when ``timeout`` elapsed first."""
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            if wait_for is not None and wait_for.done:
+                return True
+            if until is not None and until():
+                return True
+            self._live = [h for h in self._live if not h.done]
+            if not self._live:
+                return wait_for is None or wait_for.done
+            if t_end is not None and time.perf_counter() >= t_end:
+                return wait_for is None or wait_for.done
+            self._round()
+
+    def drain(self) -> None:
+        """Pump until no live invocation remains."""
+        self.pump()
+
+    def replay(self, schedule) -> list:
+        """Open-loop replay: ``schedule`` is ``[(offset_s, request)]``.
+        Each request is ticketed once its offset (from replay start)
+        elapses — pumping in-flight work while waiting, never blocking
+        arrivals on it — with the arrival backdated to the INTENDED
+        offset, so TTFT and deadlines measure open-loop lateness even
+        when the engines fall behind.  Returns the handles in schedule
+        order after a full drain."""
+        t0 = time.perf_counter()
+        handles, i = [], 0
+        schedule = sorted(schedule, key=lambda s: s[0])
+        while i < len(schedule):
+            due, request = schedule[i]
+            wait = due - (time.perf_counter() - t0)
+            if wait > 0:
+                if any(not h.done for h in handles):
+                    self.pump(timeout=wait)
+                else:
+                    time.sleep(wait)
+                continue
+            handles.append(self.submit(
+                dataclasses.replace(request, arrival_s=t0 + due)))
+            i += 1
+        self.drain()
+        return handles
+
+    def _engines(self) -> list:
+        seen, out = set(), []
+        for h in self._live:
+            if not h.done and id(h.engine) not in seen:
+                seen.add(id(h.engine))
+                out.append(h.engine)
+        return out
+
+    def _pool_owner(self, pool, engines: list):
+        """The engine holding active slots in ``pool`` (exclusive-arena
+        rule: only it may decode there)."""
+        cands = {id(e): e for e in engines}
+        for w in self.runtime._engines.values():
+            cands.setdefault(id(w.engine), w.engine)
+        for e in cands.values():
+            if e.pool is pool and e.active:
+                return e
+        return None
+
+    def _round(self) -> None:
+        """One rotation: every eligible engine gets one quantum (or, in
+        drain mode, the first runnable engine runs to completion)."""
+        engines = self._engines()
+        if not engines:
+            return
+        for engine in engines:       # finalize results already produced
+            self._collect(engine)
+        pending = [e for e in engines if e.n_pending]
+        if not pending:
+            return
+        if self.interleave:
+            k = self._rr % len(pending)
+            self._rr += 1
+            order = pending[k:] + pending[:k]
+        else:
+            order = pending
+        stepped = False
+        for engine in order:
+            owner = self._pool_owner(engine.pool, engines)
+            if owner is not None and owner is not engine:
+                continue
+            try:
+                if self.interleave:
+                    engine.step_n(self.quantum)
+                else:
+                    engine.run()
+            except PoolExhausted:
+                # the engine dropped the one doomed request and recorded
+                # its 'failed' result — THAT handle raises the typed
+                # error from result(); every other ticket keeps serving
+                pass
+            finally:
+                self._collect(engine)
+            stepped = True
+            if not self.interleave:
+                return               # drain discipline: one engine fully
+        if not stepped:
+            # every pending engine was blocked behind a foreign-owned
+            # arena whose owner is outside the gateway: never spin
+            # silently
+            raise RuntimeError(
+                "gateway livelock: no engine could take a quantum "
+                f"({len(pending)} still pending)")
+
+    def _collect(self, engine) -> None:
+        now = time.perf_counter()
+        for h in self._live:
+            if h.engine is not engine or h.done:
+                continue
+            out = engine.results.pop(h.req_id, None)
+            if out is not None:
+                h._finalize(out)
+            elif any(st.req.req_id == h.req_id
+                     for st in engine.active.values()):
+                if h._state == QUEUED:
+                    h._state = ADMITTED
+            elif h.req_id not in {r.req_id for r in engine.queue}:
+                # the engine no longer knows this request and produced no
+                # result (it was evicted out from under us): terminate the
+                # ticket instead of letting its consumer pump forever
+                h._tokens = list(h._tokens)
+                h._state = CANCELLED
+                h._result = SubmitResult(
+                    req_id=h.req_id, fn_name=h.request.fn_name, kind=h.kind,
+                    tokens=np.asarray(h._tokens, np.int32),
+                    ttft_s=float("nan"), e2e_s=float("nan"),
+                    fork_stats=h.fork_stats, status=CANCELLED)
+            w = self.runtime._engines.get(h.engine_key)
+            if w is not None and w.engine is engine:
+                w.last_used_s = now

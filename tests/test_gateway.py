@@ -1,0 +1,372 @@
+"""Async invocation gateway lifecycle: compat-shim parity with the tuple
+API, streaming handles, cancellation (incl. a cancelled borrower of a
+pinned prefix), deadline shed, interleaving fairness across engines,
+priority admission, suffix-bucket prewarm and the cluster-sim shed
+accounting."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import api as tidal
+from repro.core.scheduler import (ClusterSim, FunctionProfile,
+                                  SchedulerConfig, SimRequest, summarize)
+from repro.core.plans import plan_for
+from repro.models.registry import get_smoke_model
+from repro.runtime.continuous import ContinuousBatchingEngine
+from repro.runtime.engine import Engine
+from repro.runtime.faas import FaaSRuntime
+from repro.runtime.gateway import (DeadlineExceeded, InvocationRequest,
+                                   SubmitResult)
+from repro.runtime.kv_pool import PoolExhausted
+
+MAX_LEN = 32
+
+
+def _model(arch="smollm-135m", n_layers=2):
+    return get_smoke_model(arch, n_layers=n_layers)
+
+
+def _requests(vocab, seed=3, spec=((6, 4), (9, 3), (5, 5))):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, vocab, s).astype(np.int32), n)
+            for s, n in spec]
+
+
+def _sequential_tokens(m, params, reqs):
+    eng = Engine(m, params, donate_cache=False)
+    return [eng.generate(p[None], max_new_tokens=n,
+                         cache_len=MAX_LEN).tokens[0] for p, n in reqs]
+
+
+def _runtime(m, params, name="fn", **kw):
+    kw.setdefault("n_slots", 2)
+    rt = FaaSRuntime(max_len=MAX_LEN, trace_seq=8, page_size=4, **kw)
+    rt.deploy(tidal.static_function(name, m, params), {}, prewarm_seq=8)
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# compat shims == gateway == sequential engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "zamba2-2.7b"])
+def test_compat_shim_parity_per_pool_family(arch):
+    """The tuple APIs are shims over the gateway: submit_many, legacy
+    submit and async handles must all emit bit-identical greedy tokens to
+    the sequential engine — covering both the paged arena (attention) and
+    the dense slot pool (recurrent-state) families."""
+    m = _model(arch)
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _requests(m.cfg.vocab_size)
+    want = _sequential_tokens(m, params, reqs)
+    rt = _runtime(m, params, prewarm=False)
+
+    outs = rt.submit_many([("fn", {}, p, n) for p, n in reqs])
+    for o, w in zip(outs, want):
+        assert isinstance(o, SubmitResult) and o.status == "done"
+        np.testing.assert_array_equal(o.tokens, w)
+
+    one = rt.submit("fn", {}, reqs[0][0], reqs[0][1])
+    np.testing.assert_array_equal(one.tokens, want[0])
+
+    handles = [rt.submit(InvocationRequest("fn", p, max_new_tokens=n))
+               for p, n in reqs]
+    for h, w in zip(handles, want):
+        np.testing.assert_array_equal(h.result().tokens, w)
+
+
+def test_handle_streams_tokens_incrementally():
+    """tokens() is a per-token bridge into the step loop, not a batch
+    drain: the handle is still mid-flight after the first tokens arrive,
+    and the streamed sequence equals the final result."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = _runtime(m, params, prewarm=False, gateway_quantum=1)
+    prompt = np.arange(8, dtype=np.int32) % m.cfg.vocab_size
+
+    h = rt.submit(InvocationRequest("fn", prompt, max_new_tokens=12))
+    assert h.status == "queued"
+    it = h.tokens()
+    first = next(it)
+    assert h.status == "streaming" and not h.done
+    rest = list(it)
+    assert h.status == "done"
+    res = h.result()
+    np.testing.assert_array_equal(res.tokens, np.asarray([first] + rest))
+    want = _sequential_tokens(m, params, [(prompt, 12)])[0]
+    np.testing.assert_array_equal(res.tokens, want)
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_returns_all_pages_incl_pinned_prefix_borrower():
+    """Cancelling a mid-stream borrower of a pinned template prefix must
+    return every page it held: aliased prefix pages drop back to the
+    handle's refcount 1 (never freed — the pin survives), its COW and
+    suffix pages free outright, and co-resident requests keep serving."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, m.cfg.vocab_size, 12).astype(np.int32)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn", m, params), {},
+              template_prompt=template)
+    handle = rt._prefix_handles[("fn", 0)]
+    pool = next(iter(rt._pools.values()))
+    baseline = rt.kv_pool_stats()
+
+    borrower = np.concatenate(
+        [template, rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)])
+    other = rng.integers(0, m.cfg.vocab_size, 9).astype(np.int32)
+    want_other = _sequential_tokens(m, params, [(other, 4)])[0]
+
+    hb = rt.submit(InvocationRequest("fn", borrower, max_new_tokens=10))
+    ho = rt.submit(InvocationRequest("fn", other, max_new_tokens=4))
+    next(hb.tokens())                        # borrower is mid-stream
+    assert pool.prefix_page_refs(handle)[0] == 2     # aliased by borrower
+    assert hb.cancel()
+    assert hb.status == "cancelled"
+    assert not hb.cancel()                   # terminal: too late
+    res = ho.result()                        # queue behind stays servable
+    np.testing.assert_array_equal(res.tokens, want_other)
+    assert rt.kv_pool_stats() == baseline    # no page leaked
+    assert pool.prefix_page_refs(handle) == [1, 1, 1]
+    # cancelled result keeps the streamed tokens
+    assert hb.result().status == "cancelled"
+    assert len(hb.result().tokens) >= 1
+
+
+def test_cancel_queued_request_never_prefills():
+    """A request cancelled while still queued is dropped with zero
+    tokens and no slot/page traffic."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = _runtime(m, params, prewarm=False, n_slots=1)
+    p = np.arange(8, dtype=np.int32) % m.cfg.vocab_size
+    h1 = rt.submit(InvocationRequest("fn", p, max_new_tokens=8))
+    next(h1.tokens())                        # h1 occupies the only slot
+    h2 = rt.submit(InvocationRequest("fn", p, max_new_tokens=4))
+    assert h2.status == "queued"
+    assert h2.cancel()
+    assert h2.status == "cancelled"
+    assert len(h2.result().tokens) == 0
+    h1.result()                              # the active request drains
+
+
+# ---------------------------------------------------------------------------
+# deadline shed
+# ---------------------------------------------------------------------------
+
+def test_deadline_shed_keeps_queue_behind_servable():
+    """A queued request whose deadline expires is shed with a typed error
+    BEFORE consuming prefill; the request queued behind it still serves
+    bit-identically."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = _runtime(m, params, prewarm=False, n_slots=1)
+    rng = np.random.default_rng(1)
+    long_p = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    ok_p = rng.integers(0, m.cfg.vocab_size, 7).astype(np.int32)
+    want_ok = _sequential_tokens(m, params, [(ok_p, 3)])[0]
+
+    h_long = rt.submit(InvocationRequest("fn", long_p, max_new_tokens=10))
+    next(h_long.tokens())                    # slot taken, decode running
+    h_shed = rt.submit(InvocationRequest("fn", long_p, max_new_tokens=4,
+                                         deadline_s=1e-4))
+    h_ok = rt.submit(InvocationRequest("fn", ok_p, max_new_tokens=3))
+    time.sleep(0.005)                        # deadline passes while queued
+    res_ok = h_ok.result()
+    with pytest.raises(DeadlineExceeded):
+        h_shed.result()
+    assert h_shed.status == "shed"
+    with pytest.raises(DeadlineExceeded):
+        list(h_shed.tokens())
+    np.testing.assert_array_equal(res_ok.tokens, want_ok)
+    h_long.result()
+    assert all(v["n_free_slots"] == 1 for v in rt.kv_pool_stats().values()
+               if "n_free_slots" in v)
+
+
+def test_cluster_sim_deadline_shed_accounting():
+    """The discrete-event sim mirrors the gateway's shed semantics: an
+    expired request consumes no service (the queue behind it shortens)
+    and summarize() counts it."""
+    plan = plan_for("gemma-2b", 1, 512)
+    prof = FunctionProfile("fn", lambda s: plan,
+                           model_bytes=plan.total_weight_bytes)
+    cfg = SchedulerConfig(n_gpus=1, keep_alive_s=100.0, timeout_s=1e9)
+    reqs = [SimRequest("fn", 0.0, 512, 0),
+            SimRequest("fn", 0.01, 512, 1, deadline_s=0.05),
+            SimRequest("fn", 0.02, 512, 2)]
+    out = ClusterSim(cfg, {"fn": prof}).run(reqs)
+    s = summarize(out)
+    assert s["shed"] == 1 and out[1].kind == "shed"
+    assert out[1].service_s == 0.0
+    # the shed request freed the server for the one behind it
+    no_dl = [SimRequest("fn", 0.0, 512, 0), SimRequest("fn", 0.01, 512, 1),
+             SimRequest("fn", 0.02, 512, 2)]
+    base = ClusterSim(cfg, {"fn": prof}).run(no_dl)
+    assert out[2].queue_s < base[2].queue_s
+
+
+# ---------------------------------------------------------------------------
+# interleaving fairness
+# ---------------------------------------------------------------------------
+
+def test_interleaving_bounds_short_request_ttft():
+    """A short warm request on one function gets its first token while a
+    long decode on ANOTHER function (its own arena) is still streaming:
+    quantum interleaving, not drain-to-completion."""
+    m_long = _model()
+    m_short = _model()                       # distinct object => own arena
+    rt = FaaSRuntime(n_slots=2, max_len=64, trace_seq=8, page_size=8,
+                     prewarm=False, gateway_quantum=2)
+    p_long = m_long.init_params(jax.random.PRNGKey(0))
+    p_short = m_short.init_params(jax.random.PRNGKey(1))
+    rt.deploy(tidal.static_function("fn-long", m_long, p_long), {})
+    rt.deploy(tidal.static_function("fn-short", m_short, p_short), {})
+    rng = np.random.default_rng(0)
+    pl = rng.integers(0, m_long.cfg.vocab_size, 8).astype(np.int32)
+    ps = rng.integers(0, m_short.cfg.vocab_size, 8).astype(np.int32)
+    rt.submit("fn-long", {}, pl, 2)          # warm both engines
+    rt.submit("fn-short", {}, ps, 2)
+
+    h_long = rt.submit(InvocationRequest("fn-long", pl, max_new_tokens=40))
+    h_short = rt.submit(InvocationRequest("fn-short", ps,
+                                          max_new_tokens=3))
+    res_short = h_short.result()
+    # the long run is still mid-decode when the short one completed
+    assert h_long.status == "streaming"
+    assert len(h_long._tokens) < 40
+    res_long = h_long.result()
+    assert len(res_long.tokens) == 40
+    assert res_short.e2e_s < res_long.e2e_s
+    # drain-to-completion on the same pair would pay the whole long run
+    # before the short one's first token; interleaved must beat that
+    assert res_short.ttft_s < res_long.e2e_s
+
+
+def test_priority_ranks_admission():
+    """With one slot, a high-priority request admitted over an earlier
+    low-priority one (FIFO holds within a rank)."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    cbe = ContinuousBatchingEngine(m, params, n_slots=1, max_len=MAX_LEN)
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+    first = cbe.submit(p, 3)
+    cbe.step()                                     # first takes the slot
+    low = cbe.submit(p, 2, priority=0)
+    high = cbe.submit(p, 2, priority=5)
+    order = []
+    while cbe.step():
+        for rid in list(cbe.results):
+            if rid not in order:
+                order.append(rid)
+    order += [rid for rid in cbe.results if rid not in order]
+    assert order.index(first) < order.index(high) < order.index(low)
+
+
+def test_prune_never_evicts_engines_with_live_tickets():
+    """Keep-alive/LRU pruning must skip engines holding queued or active
+    gateway requests: a batch spanning more engines than the warm cap
+    completes every request (regression: the LRU drop spuriously
+    cancelled the oldest engine's in-flight tickets)."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False, max_warm_engines=1)
+    for i in range(3):
+        rt.deploy(tidal.static_function(f"fn-{i}", m, params), {})
+    reqs = _requests(m.cfg.vocab_size, seed=8)
+    want = _sequential_tokens(m, params, reqs)
+    outs = rt.submit_many([(f"fn-{i}", {}, p, n)
+                           for i, (p, n) in enumerate(reqs)])
+    for o, w in zip(outs, want):
+        assert o.status == "done"
+        np.testing.assert_array_equal(o.tokens, w)
+    rt._prune(time.perf_counter())           # idle now: cap applies again
+    assert len(rt._engines) <= 1
+
+
+def test_unservable_request_fails_alone():
+    """A doomed request (worst case can never fit past the pinned prefix
+    pages) terminates with PoolExhausted on ITS handle only — co-resident
+    and queued-behind tickets keep serving (regression: the raise escaped
+    the pump into innocent handles' result())."""
+    m = _model(n_layers=1)
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, m.cfg.vocab_size, 12).astype(np.int32)
+    rt = FaaSRuntime(n_slots=1, max_len=32, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn", m, params), {},
+              template_prompt=template)      # pins 3 of 8 pages
+    good = np.concatenate(
+        [template, rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)])
+    doomed = rng.integers(0, m.cfg.vocab_size, 28).astype(np.int32)
+    h1 = rt.submit(InvocationRequest("fn", good, max_new_tokens=4))
+    h2 = rt.submit(InvocationRequest("fn", doomed, max_new_tokens=4))
+    h3 = rt.submit(InvocationRequest("fn", good, max_new_tokens=3))
+    res1, res3 = h1.result(), h3.result()    # never see h2's error
+    assert res1.status == res3.status == "done"
+    with pytest.raises(PoolExhausted, match="pinned prefix"):
+        h2.result()
+
+
+def test_drain_mode_serves_across_evicted_engines():
+    """interleave=False (the benchmark's drain baseline) must advance to
+    the next runnable engine when an earlier one was evicted mid-flight
+    (regression: a collected-but-unsteppable first engine raised a
+    spurious 'gateway livelock')."""
+    m_a, m_b = _model(), _model()
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.gateway.interleave = False
+    pa = m_a.init_params(jax.random.PRNGKey(0))
+    pb = m_b.init_params(jax.random.PRNGKey(1))
+    rt.deploy(tidal.static_function("fn-a", m_a, pa), {})
+    rt.deploy(tidal.static_function("fn-b", m_b, pb), {})
+    p = np.arange(8, dtype=np.int32) % m_a.cfg.vocab_size
+    ha = rt.submit(InvocationRequest("fn-a", p, max_new_tokens=4))
+    hb = rt.submit(InvocationRequest("fn-b", p, max_new_tokens=4))
+    rt.evict("fn-a")                         # ha's engine is yanked
+    res_b = hb.result()                      # no livelock error
+    assert res_b.status == "done" and len(res_b.tokens) == 4
+    assert ha.status == "cancelled"
+
+
+# ---------------------------------------------------------------------------
+# suffix-bucket prewarm
+# ---------------------------------------------------------------------------
+
+def test_suffix_prewarm_buckets_cover_first_hit():
+    """deploy(template_prompt=) pre-compiles prefill_from at every page-
+    multiple suffix length, and the engine buckets each reuse hit onto
+    those shapes: the first reused-prefix invocation triggers NO lazy
+    compile, stays bit-identical, and reports the bucketed reuse."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, m.cfg.vocab_size, 12).astype(np.int32)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4)
+    rt.deploy(tidal.static_function("fn", m, params), {}, prewarm_seq=8,
+              template_prompt=template)
+    prefill_from = rt._serve_fns_for("fn")[1]
+    n_buckets = prefill_from._cache_size()
+    assert n_buckets >= MAX_LEN // 4         # one executable per bucket
+
+    suffix = rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+    prompt = np.concatenate([template, suffix])
+    want = _sequential_tokens(m, params, [(prompt, 4)])[0]
+    res = rt.submit("fn", {}, prompt, 4)
+    np.testing.assert_array_equal(res.tokens, want)
+    # suffix 6 rounds up to the 8-bucket: reuse shrinks 12 -> 10
+    assert res.reused_prefix_len == 10
+    assert prefill_from._cache_size() == n_buckets   # no lazy compile
