@@ -22,6 +22,8 @@ leaf falls back to replication rather than failing.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 
 import jax
@@ -29,6 +31,32 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.utils import path_str
+
+# The mesh whose 'model' axis the Pallas attention wrappers shard_map
+# over.  Pallas calls cannot live inside GSPMD-partitioned jit code —
+# the kernel would silently fall back to the XLA reference — so the
+# sharded serve entry points enter this context around tracing, and the
+# attention layer threads it down to ``repro.kernels.ops`` where the
+# kernel is shard_map'd per 'model' shard (heads split; each device runs
+# the un-partitioned kernel on its head slice).
+_KERNEL_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "kernel_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_kernel_mesh(mesh):
+    """Scope under which Pallas attention wrappers shard_map over
+    ``mesh``'s 'model' axis (None = single-device, no wrapping)."""
+    token = _KERNEL_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _KERNEL_MESH.reset(token)
+
+
+def current_kernel_mesh():
+    """The mesh installed by :func:`use_kernel_mesh` (or None)."""
+    return _KERNEL_MESH.get()
 
 
 def dp_axes(mesh: Mesh) -> tuple:

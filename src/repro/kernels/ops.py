@@ -6,14 +6,36 @@ The model layer calls these through ``cfg.attn_impl``:
 
 Wrappers own the layout glue (head-major transposes, block-size selection,
 shape-divisibility fallbacks) so kernels stay minimal.
+
+Under a ShardingPlan the attention entry points accept ``mesh=``: a
+Pallas call traced inside GSPMD-partitioned jit code would make XLA
+replicate its operands (the kernel is a partitioning black box), so the
+wrappers shard_map themselves over the mesh's 'model' axis instead —
+each device runs the un-partitioned kernel on its contiguous HEAD slice
+(q heads and KV heads split together, so GQA's ``h -> h // group``
+mapping stays local to the shard).  Shapes the head axes cannot split
+evenly fall back to the XLA reference, which GSPMD partitions like any
+other jnp code.
 """
 
 from __future__ import annotations
 
 
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ref
+
+
+def _model_shards(mesh, *head_counts) -> int:
+    """How many ways to shard_map over 'model' (1 = don't wrap)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    n = mesh.shape["model"]
+    if n <= 1 or any(h % n for h in head_counts):
+        return 1
+    return n
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.paged_decode_attention import (
@@ -30,10 +52,17 @@ def _pick_block(S: int, want: int = 128) -> int:
 
 
 def flash_attention(q, k, v, causal: bool = True, softcap: float = 0.0,
-                    impl: str = "pallas"):
+                    impl: str = "pallas", mesh=None):
     """q: [B, H, S, d]; k,v: [B, KV, T, d] -> [B, H, S, d]."""
     if impl == "xla" or (softcap > 0):
         return ref.flash_attention_ref(q, k, v, causal=causal, softcap=softcap)
+    if _model_shards(mesh, q.shape[1], k.shape[1]) > 1:
+        hs = P(None, "model", None, None)        # split the head axis
+        return shard_map(
+            lambda qs, ks, vs: flash_attention(qs, ks, vs, causal=causal,
+                                               softcap=softcap, impl=impl),
+            mesh=mesh, in_specs=(hs, hs, hs), out_specs=hs,
+            check_rep=False)(q, k, v)
     bq = _pick_block(q.shape[2])
     bk = _pick_block(k.shape[2])
     return _flash_pallas(q, k, v, causal=causal, block_q=bq, block_k=bk)
@@ -48,13 +77,26 @@ def decode_attention(q, k, v, length, impl: str = "pallas"):
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
-                           impl: str = "pallas"):
+                           impl: str = "pallas", mesh=None):
     """q: [B, H, d]; k_pages, v_pages: [P, ps, KV, d] (the page arena in the
     model's storage layout); page_table: [B, NB]; lengths: scalar or [B].
     Returns [B, H, d]."""
     if impl == "xla":
         return ref.paged_decode_attention_ref(q, k_pages, v_pages,
                                               page_table, lengths)
+    if _model_shards(mesh, q.shape[1], k_pages.shape[2]) > 1:
+        # the arena's KV-head axis carries the plan's 'model' placement
+        # (paged_cache_specs), so each shard attends its own head slice
+        # against locally-resident pages; the page table and lengths are
+        # replicated host-driven control state
+        return shard_map(
+            lambda qs, ks, vs, pt, ln: paged_decode_attention(
+                qs, ks, vs, pt, ln, impl=impl),
+            mesh=mesh,
+            in_specs=(P(None, "model", None), P(None, None, "model", None),
+                      P(None, None, "model", None), P(), P()),
+            out_specs=P(None, "model", None),
+            check_rep=False)(q, k_pages, v_pages, page_table, lengths)
     # kernel wants the head-major arena [P, KV, ps, d] — same per-step
     # transpose the dense decode path pays for its [B, T, KV, hd] cache
     return _paged_decode_pallas(q, k_pages.transpose(0, 2, 1, 3),

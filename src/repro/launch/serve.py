@@ -133,6 +133,10 @@ def main():
                     help="open-loop arrival rate (requests/s)")
     ap.add_argument("--deadline", type=float, default=None,
                     help="queueing deadline (s); expired requests shed")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill: split prompts into page-multiple "
+                         "chunks interleaved with decode; the gateway "
+                         "quantum becomes this token budget")
     args = ap.parse_args()
 
     mesh = None
@@ -151,7 +155,8 @@ def main():
                      max_len=args.prompt_len + args.max_new,
                      keep_alive_s=args.keep_alive,
                      trace_seq=args.prompt_len,
-                     mesh=mesh)
+                     mesh=mesh,
+                     chunk_tokens=args.chunk_tokens)
 
     rng = np.random.default_rng(0)
     for i in range(args.functions):

@@ -205,9 +205,11 @@ def attention_block(
         cv = cv.at[pages, off].set(v[:, 0].astype(cv.dtype))
         new_cache = {"k": ck, "v": cv}
         if cfg.attn_impl == "pallas":
+            from repro.distributed.sharding import current_kernel_mesh
             from repro.kernels import ops as kops
             out = kops.paged_decode_attention(q[:, 0], ck, cv, page_table,
-                                              cache_pos + 1)
+                                              cache_pos + 1,
+                                              mesh=current_kernel_mesh())
             out = out[:, None]                                   # [B,1,H,hd]
         else:
             T = page_table.shape[1] * ps
@@ -269,11 +271,13 @@ def attention_block(
             v = jax.lax.with_sharding_constraint(
                 v, P("data", None, None, None))
         if cfg.attn_impl == "pallas" and causal and S > 1:
+            from repro.distributed.sharding import current_kernel_mesh
             from repro.kernels import ops as kops
             out = kops.flash_attention(
                 q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                 v.transpose(0, 2, 1, 3), causal=True,
-                softcap=cfg.attn_logit_softcap)
+                softcap=cfg.attn_logit_softcap,
+                mesh=current_kernel_mesh())
             out = out.transpose(0, 2, 1, 3)                          # [B,S,H,hd]
         else:
             if causal:

@@ -13,6 +13,22 @@ completion, this engine keeps an admission queue and a step loop:
   * **retirement** — finished requests release their slot, which unblocks
     the next queued admission on the same step.
 
+With ``chunk_tokens`` set (paged pools only), prefill is CHUNKED into the
+step loop instead of running to completion at admission: every ``step``
+becomes one MIXED batched step — up to ``chunk_tokens`` prompt tokens
+advance the prefill cursors of mid-prefill slots (each chunk a
+page-multiple ``prefill_from`` call at the cursor's offset), then one
+batched decode runs over the slots that already finished their prompt.  A
+burst of long cold prompts therefore no longer head-of-line-blocks the
+decode tokens of everything admitted behind it — the p95-TTFT tail TIDAL
+targets.  Admission under chunking reserves only the first chunk's pages
+(see ``PagedKVCachePool.extend_budget``); the budget grows to the full
+worst case before the final chunk so decode keeps the deadlock-free
+reservation invariant.  Mid-prefill slots ride the shared decode batch as
+dummies writing at the last padded position, whose block is never mapped
+while the cursor is short of the prompt — the write lands on the null
+page and the logits row is discarded, exactly like a free slot's.
+
 Attention families (dense / moe / MLA) store KV state in a block-paged
 :class:`~repro.runtime.kv_pool.PagedKVCachePool`: admission writes only the
 prompt's pages, decode maps one more page per boundary crossing, and
@@ -38,7 +54,7 @@ import numpy as np
 
 from repro.core.streaming import (ForkSession, streamed_prefill,
                                   supports_streamed_prefill)
-from repro.distributed.sharding import ShardingPlan
+from repro.distributed.sharding import ShardingPlan, use_kernel_mesh
 from repro.models.registry import Model
 from repro.runtime.engine import sample_greedy, sample_token
 from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
@@ -54,41 +70,51 @@ def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
     attention paths.  Tokens / positions / page tables / logits are
     replicated (host-driven control state).  ``prefill_from_fn`` is the
     suffix-only entry point for prefix KV reuse (None for families without
-    one)."""
+    one).  Every entry point is called (and therefore traced) under
+    ``use_kernel_mesh(plan.mesh)`` so ``attn_impl='pallas'`` shard_maps
+    the attention kernels over the 'model' axis instead of silently
+    falling back to the XLA reference inside the partitioned jit."""
     rep = plan.replicated
     pshard = plan.param_shardings(model)
     paged = isinstance(pool, PagedKVCachePool)
     prefill_len = pool.padded_len if paged else pool.max_len
     pc_shard = plan.cache_shardings(
         model, model.make_cache(1, prefill_len, abstract=True))
-    prefill_fn = jax.jit(
+
+    def _km(fn):
+        def wrapped(*args):
+            with use_kernel_mesh(plan.mesh):
+                return fn(*args)
+        return wrapped
+
+    prefill_fn = _km(jax.jit(
         lambda p, inputs, cache: model.prefill(p, inputs, cache),
         in_shardings=(pshard, rep, pc_shard),
-        out_shardings=(rep, pc_shard))
+        out_shardings=(rep, pc_shard)))
     prefill_from_fn = None
     if model.supports_paged_kv:
-        prefill_from_fn = jax.jit(
+        prefill_from_fn = _km(jax.jit(
             lambda p, toks, cache, off: model.prefill_from(
                 p, {"tokens": toks}, cache, off),
             in_shardings=(pshard, rep, pc_shard, rep),
-            out_shardings=(rep, pc_shard))
+            out_shardings=(rep, pc_shard)))
     if paged:
         ps = pool.page_size
         dshard = plan.paged_cache_shardings(model, pool.cache)
-        decode_fn = jax.jit(
+        decode_fn = _km(jax.jit(
             lambda p, cache, toks, pos, pt: model.decode_step_paged(
                 p, cache, {"tokens": toks}, pos, pt, ps),
             in_shardings=(pshard, dshard, rep, rep, rep),
             out_shardings=(rep, dshard),
-            donate_argnums=(1,) if donate_cache else ())
+            donate_argnums=(1,) if donate_cache else ()))
     else:
         dshard = plan.cache_shardings(model, pool.cache)
-        decode_fn = jax.jit(
+        decode_fn = _km(jax.jit(
             lambda p, cache, toks, pos: model.decode_step(
                 p, cache, {"tokens": toks}, pos),
             in_shardings=(pshard, dshard, rep, rep),
             out_shardings=(rep, dshard),
-            donate_argnums=(1,) if donate_cache else ())
+            donate_argnums=(1,) if donate_cache else ()))
     return prefill_fn, prefill_from_fn, decode_fn
 
 
@@ -134,6 +160,8 @@ class _Active:
     streamed: bool
     ttft_s: float
     reused_prefix_len: int = 0
+    cursor: int = 0                  # prompt tokens prefilled so far
+    prefilling: bool = False         # True until the cursor reaches the prompt
 
 
 class ContinuousBatchingEngine:
@@ -157,7 +185,8 @@ class ContinuousBatchingEngine:
                  plan: Optional[ShardingPlan] = None,
                  pool: Optional[Any] = None,
                  prefix_index: Optional[Any] = None,
-                 bucket_suffix: bool = False):
+                 bucket_suffix: bool = False,
+                 chunk_tokens: Optional[int] = None):
         if model.is_encdec:
             raise NotImplementedError(
                 "continuous batching needs per-slot decode positions; the "
@@ -237,10 +266,20 @@ class ContinuousBatchingEngine:
         # shrinking the reuse) so every hit lands on a pre-compilable
         # bucket instead of a per-length lazy jit trace
         self.bucket_suffix = bucket_suffix
+        # chunked prefill: prompts longer than this many tokens past their
+        # reused prefix prefill chunk-by-chunk inside the step loop (page
+        # multiple so every chunk hits the prewarmed prefill_from buckets);
+        # None — or a non-paged pool, whose recurrent state has no
+        # position-addressable suffix prefill — keeps whole-prompt prefill
+        self.chunk_tokens = None
+        if chunk_tokens is not None and self.paged:
+            ps = self.pool.page_size
+            self.chunk_tokens = max(ps, ps * -(-int(chunk_tokens) // ps))
         # per-slot feedback state (free slots decode position 0 / token 0;
         # their logits are computed and discarded)
         self._tok = np.zeros((n_slots, 1), np.int32)
         self._pos = np.zeros((n_slots,), np.int32)
+        self._step_tokens = 0            # work done by the last step()
 
     # ------------------------------------------------------------------
     def params(self):
@@ -334,7 +373,8 @@ class ContinuousBatchingEngine:
             req.prefix_hit = None
             if self.paged and self.prefix_index is not None:
                 req.prefix_hit = self.prefix_index.match(req.prompt)
-            if req.prefix_hit is not None and self.bucket_suffix:
+            if req.prefix_hit is not None and (
+                self.bucket_suffix or self.chunk_tokens is not None):
                 # shrink the reuse so the suffix length lands on a page
                 # multiple: the handful of re-prefilled cached tokens is
                 # far cheaper than a per-length lazy compile of
@@ -350,11 +390,24 @@ class ContinuousBatchingEngine:
             req.prefix_hit = None            # stale handle: full prefill
         return req.prefix_hit
 
+    def _chunked(self, req: Request, reuse: int) -> bool:
+        """True when the request's uncached suffix prefills chunk-by-chunk
+        instead of in one shot at admission."""
+        return (self.chunk_tokens is not None
+                and len(req.prompt) - reuse > self.chunk_tokens)
+
     def _can_admit(self, req: Request) -> bool:
         if self.paged:
             hit = self._prefix_hit(req)
-            return self.pool.can_admit(len(req.prompt) + req.max_new_tokens,
-                                       reuse_len=hit[1] if hit else 0)
+            reuse = hit[1] if hit else 0
+            total = len(req.prompt) + req.max_new_tokens
+            if self._chunked(req, reuse):
+                # chunked admission reserves only the FIRST chunk's pages;
+                # the budget grows chunk-by-chunk (full worst case before
+                # the final chunk) so a long cold prompt no longer starves
+                # short requests of pages at admission time
+                total = reuse + self.chunk_tokens
+            return self.pool.can_admit(total, reuse_len=reuse)
         return bool(self.pool.n_free)
 
     def _record_dropped(self, req: Request, status: str,
@@ -399,6 +452,26 @@ class ContinuousBatchingEngine:
     def _admit(self, req: Request) -> None:
         hit = self._prefix_hit(req) if self.paged else None
         reuse = hit[1] if hit else 0
+        if self.paged and self._chunked(req, reuse):
+            # chunked admission: reserve only the first chunk's pages and
+            # park the slot mid-prefill — the step loop advances its
+            # cursor chunk-by-chunk alongside everyone else's decode.
+            # Until then the slot rides the shared decode batch as a
+            # dummy: token 0 written at the LAST padded position, whose
+            # page stays unmapped while the cursor is short of the prompt,
+            # so the write lands on the null page and the logits row is
+            # discarded exactly like a free slot's.
+            slot = self.pool.alloc(len(req.prompt), req.max_new_tokens,
+                                   shared_prefix=hit[0] if hit else None,
+                                   reuse_len=reuse,
+                                   budget_tokens=reuse + self.chunk_tokens)
+            self._tok[slot, 0] = 0
+            self._pos[slot] = self.pool.padded_len - 1
+            self.active[slot] = _Active(req=req, slot=slot, tokens=[],
+                                        streamed=False, ttft_s=0.0,
+                                        reused_prefix_len=reuse,
+                                        cursor=reuse, prefilling=True)
+            return
         if self.paged:
             slot = self.pool.alloc(len(req.prompt), req.max_new_tokens,
                                    shared_prefix=hit[0] if hit else None,
@@ -451,21 +524,80 @@ class ContinuousBatchingEngine:
         if len(st.tokens) >= req.max_new_tokens:
             self._retire(slot)
 
-    def _retire(self, slot: int, status: str = "done") -> None:
+    def _run_chunk(self, slot: int) -> int:
+        """Advance one mid-prefill slot by up to ``chunk_tokens`` prompt
+        tokens: gather the slot's pages as the working dense cache, run
+        ``prefill_from`` at the cursor's offset, scatter the chunk's pages
+        back.  Returns the tokens processed — 0 when the pool cannot
+        extend the slot's page budget yet (retried next step)."""
+        st = self.active[slot]
+        req = st.req
+        P = len(req.prompt)
+        ps = self.pool.page_size
+        rem = P - st.cursor
+        final = rem <= self.chunk_tokens
+        if final:
+            # decode invariant: the FULL worst-case budget must be
+            # reserved before the first generated token exists, so
+            # ensure_len during decode can never fail
+            if not self.pool.extend_budget(slot, P + req.max_new_tokens):
+                return 0
+            # re-run back to the last page boundary so the chunk length
+            # stays a page multiple (the prewarmed bucket shapes);
+            # re-prefilled tokens rewrite their own pages with identical
+            # values — greedy output is bit-identical
+            start = max(st.reused_prefix_len, P - ps * -(-rem // ps))
+            end = P
+        else:
+            start = st.cursor
+            end = st.cursor + self.chunk_tokens
+            if not self.pool.extend_budget(slot, end):
+                return 0
+        cache = self.pool.read_slot_full(slot)
+        toks = jnp.asarray(req.prompt[None, start:end])
+        streamed = (self.session is not None and self._params is None
+                    and supports_streamed_prefill(self.model))
+        if streamed:
+            logits, cache = streamed_prefill(
+                self.session, {"tokens": toks}, cache, offset=start)
+        else:
+            logits, cache = self.prefill_from_fn(
+                self.params(), toks, cache, jnp.int32(start))
+        self.pool.write_suffix(slot, cache, start, end)
+        st.streamed = st.streamed or streamed
+        st.cursor = end
+        if final:
+            first = self._sample_first(req, logits)
+            st.ttft_s = time.perf_counter() - req.submit_s
+            st.prefilling = False
+            st.tokens.append(first)
+            self._tok[slot, 0] = first
+            # next decode writes the first generated token at len(prompt)
+            self._pos[slot] = P
+            if req.token_cb is not None:
+                req.token_cb(req.req_id, first, 0)
+            if len(st.tokens) >= req.max_new_tokens:
+                self._retire(slot)
+        return end - start
+
+    def _retire(self, slot: int, status: str = "done",
+                error: Optional[str] = None) -> None:
         st = self.active.pop(slot)
         self.pool.release(slot)
         self._tok[slot, 0] = 0
         self._pos[slot] = 0
+        e2e = time.perf_counter() - st.req.submit_s
         self.results[st.req.req_id] = RequestOutput(
             req_id=st.req.req_id,
             tokens=np.asarray(st.tokens, np.int32),
             prompt_len=len(st.req.prompt),
             n_generated=len(st.tokens),
-            ttft_s=st.ttft_s,
-            e2e_s=time.perf_counter() - st.req.submit_s,
+            # a slot cancelled/failed mid-prefill never emitted a token
+            ttft_s=st.ttft_s if st.tokens else e2e,
+            e2e_s=e2e,
             streamed_prefill=st.streamed,
             reused_prefix_len=st.reused_prefix_len,
-            status=status)
+            status=status, error=error)
 
     # ------------------------------------------------------------------
     def _foreign_slots(self) -> int:
@@ -475,7 +607,9 @@ class ContinuousBatchingEngine:
         return (self.pool.n_slots - free) - len(self.active)
 
     def step(self) -> bool:
-        """Admit what fits, run one batched decode, retire the finished.
+        """One MIXED batched step: admit what fits, advance mid-prefill
+        cursors by up to ``chunk_tokens`` prompt tokens, run one batched
+        decode over the slots past their prompt, retire the finished.
 
         Returns False once the engine is fully drained."""
         if self.queue or self.active:
@@ -493,37 +627,78 @@ class ContinuousBatchingEngine:
                     "engine; drain or evict it before decoding here "
                     "(engines borrow the arena exclusively)")
         self._shed_expired(time.perf_counter())
+        self._step_tokens = 0
+        admitted = 0
         while True:
             head = self._next_admission()
             if head is None:
                 break
             self.queue.remove(head)
             self._admit(head)
-        if not self.active:
-            if self.queue:
-                # the pool is completely idle (no active slots here, no
-                # foreign slots — checked above) yet the head request
-                # still does not fit: nothing can ever retire to unblock
-                # it — only pinned prefix pages occupy the arena — so
-                # looping would livelock.  Drop the doomed request (the
-                # queue behind it stays servable) and surface the error.
-                head = self._queue_head()
-                self.queue.remove(head)
+            admitted += 1
+        chunked = 0
+        if self.chunk_tokens is not None:
+            # chunk phase: spend up to chunk_tokens prompt tokens across
+            # the mid-prefill slots, oldest request first (one admission's
+            # worth of prefill work per step, whoever it belongs to)
+            budget = self.chunk_tokens
+            for slot in sorted(
+                    (s for s in self.active if self.active[s].prefilling),
+                    key=lambda s: self.active[s].req.req_id):
+                if budget <= 0:
+                    break
+                n = self._run_chunk(slot)
+                budget -= n
+                chunked += n
+        decoding = [s for s in self.active if not self.active[s].prefilling]
+        if not decoding:
+            if not self.active:
+                if self.queue:
+                    # the pool is completely idle (no active slots here, no
+                    # foreign slots — checked above) yet the head request
+                    # still does not fit: nothing can ever retire to
+                    # unblock it — only pinned prefix pages occupy the
+                    # arena — so looping would livelock.  Drop the doomed
+                    # request (the queue behind it stays servable) and
+                    # surface the error.
+                    head = self._queue_head()
+                    self.queue.remove(head)
+                    msg = (
+                        f"request {head.req_id} needs more KV pages than "
+                        "the idle arena can ever free (pinned prefix pages "
+                        "shrink attainable capacity); use a larger arena "
+                        "or release template prefixes")
+                    # a 'failed' result terminates any gateway handle
+                    # waiting on the dropped request; the raise surfaces
+                    # the error to whoever is driving the step loop
+                    self._record_dropped(head, "failed", error=msg)
+                    raise PoolExhausted(msg)
+                return False
+            if not admitted and not chunked:
+                # every slot is mid-prefill and none could extend its page
+                # budget this step (nor could anything be admitted): the
+                # chunked budgets have wedged against each other and no
+                # decode can ever retire to free pages.  Fail the YOUNGEST
+                # mid-prefill request — the elders keep their progress and
+                # its pages unwedge them next step.
+                slot = max((s for s in self.active
+                            if self.active[s].prefilling),
+                           key=lambda s: self.active[s].req.req_id)
                 msg = (
-                    f"request {head.req_id} needs more KV pages than the "
-                    "idle arena can ever free (pinned prefix pages shrink "
-                    "attainable capacity); use a larger arena or release "
-                    "template prefixes")
-                # a 'failed' result terminates any gateway handle waiting
-                # on the dropped request; the raise surfaces the error to
-                # whoever is driving the step loop
-                self._record_dropped(head, "failed", error=msg)
+                    f"request {self.active[slot].req.req_id} cannot grow "
+                    "its chunked-prefill page budget and no decode can "
+                    "free pages (all slots mid-prefill); failed to unwedge "
+                    "the arena — use a larger arena or smaller chunks")
+                self._retire(slot, status="failed", error=msg)
                 raise PoolExhausted(msg)
-            return False
+            self._step_tokens = chunked
+            return True
         if self.paged:
             # crossing a page boundary this step maps one more page
-            # (reserved at admission, so this can never exhaust the pool)
-            for slot in self.active:
+            # (reserved at admission, so this can never exhaust the pool);
+            # mid-prefill slots skip this — their dummy position's page is
+            # deliberately unmapped (null-page write)
+            for slot in decoding:
                 self.pool.ensure_len(slot, int(self._pos[slot]) + 1)
             # the page table rides device-resident; only rows dirtied by
             # admit/grow/retire re-upload (steady-state decode sends none)
@@ -535,7 +710,7 @@ class ContinuousBatchingEngine:
                 self.params(), self.pool.cache, jnp.asarray(self._tok),
                 jnp.asarray(self._pos))
         nxt = np.asarray(sample_greedy(logits))          # [n_slots]
-        sampled = [s for s in self.active
+        sampled = [s for s in decoding
                    if self.active[s].req.temperature > 0]
         if sampled:
             nxt = nxt.copy()                 # jax-backed views are read-only
@@ -545,7 +720,7 @@ class ContinuousBatchingEngine:
                 nxt[slot] = sample_token(rows[slot], st.req.temperature,
                                          st.req.top_p, st.req.seed,
                                          len(st.tokens))
-        for slot in list(self.active):
+        for slot in decoding:
             st = self.active[slot]
             tok = int(nxt[slot])
             st.tokens.append(tok)
@@ -555,6 +730,7 @@ class ContinuousBatchingEngine:
                 st.req.token_cb(st.req.req_id, tok, len(st.tokens) - 1)
             if len(st.tokens) >= st.req.max_new_tokens:
                 self._retire(slot)
+        self._step_tokens = chunked + len(decoding)
         return bool(self.queue or self.active)
 
     def step_n(self, n: int) -> bool:
@@ -564,6 +740,19 @@ class ContinuousBatchingEngine:
         release point.  Returns False once fully drained."""
         for _ in range(max(1, n)):
             if not self.step():
+                return False
+        return True
+
+    def step_tokens(self, budget: int) -> bool:
+        """Steps until at least ``budget`` tokens of work have run — the
+        gateway's TOKEN quantum under chunked prefill, where a step's cost
+        is its chunked prompt tokens plus its decode batch, not a request
+        count.  Returns False once fully drained."""
+        spent = 0
+        while spent < max(1, budget):
+            alive = self.step()
+            spent += max(1, self._step_tokens)
+            if not alive:
                 return False
         return True
 

@@ -93,7 +93,8 @@ class FaaSRuntime:
                  trace_seq: int = 32, page_size: int = 8,
                  mesh: Optional[Mesh] = None,
                  locality_max_extra_load: int = 2,
-                 gateway_quantum: int = 2):
+                 gateway_quantum: int = 2,
+                 chunk_tokens: Optional[int] = None):
         self.mesh = mesh
         self.locality_max_extra_load = locality_max_extra_load
         self.instances = self._make_instances(mesh)
@@ -103,6 +104,12 @@ class FaaSRuntime:
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
+        # chunked prefill: engines split every prompt suffix longer than
+        # this into page-multiple prefill_from chunks interleaved with
+        # decode (None = legacy whole-prompt prefill at admission); the
+        # gateway's quantum switches to the same TOKEN budget so a chunk
+        # and a decode batch cost one comparable unit of schedule
+        self.chunk_tokens = chunk_tokens
         self.keep_alive_s = keep_alive_s
         self.max_warm_engines = max_warm_engines
         self.prewarm = prewarm
@@ -128,7 +135,8 @@ class FaaSRuntime:
         self._baked_events: dict[str, dict] = {}
         # the async front door: submit() tickets route through this loop;
         # the legacy tuple APIs are thin compat shims over it
-        self.gateway = InvocationGateway(self, quantum=gateway_quantum)
+        self.gateway = InvocationGateway(self, quantum=gateway_quantum,
+                                         quantum_tokens=chunk_tokens)
 
     @staticmethod
     def _make_instances(mesh: Optional[Mesh]) -> list:
@@ -256,7 +264,13 @@ class FaaSRuntime:
         if self.prewarm and not fn.model.is_encdec:
             self._fn_keys[fn.name] = self._prewarm_engine_fns(fn,
                                                               prewarm_seq)
-            if template_prompt is not None:
+            if template_prompt is not None or (
+                    self.chunk_tokens is not None
+                    and fn.model.supports_paged_kv):
+                # chunked prefill runs every chunk through prefill_from at
+                # a page-multiple length — the same bucket shapes the
+                # suffix-reuse prewarm compiles — so chunking never pays a
+                # lazy per-length jit either
                 self._fn_keys[fn.name] += self._prewarm_suffix_fns(fn)
             self.workers.prewarm_for_functions(self._fn_keys)
 
@@ -532,7 +546,7 @@ class FaaSRuntime:
             prefill_from_fn=prefill_from_fn,
             page_size=self.page_size, plan=inst.plan,
             pool=self._pool_for(inst, model),
-            bucket_suffix=True)
+            bucket_suffix=True, chunk_tokens=self.chunk_tokens)
         # a lazy per-instance bake reuses THIS fork's params rather than
         # streaming the model a second time (params_fn only resolves —
         # blocking on the stream — when a bake actually happens here)

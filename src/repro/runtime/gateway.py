@@ -217,14 +217,21 @@ class InvocationGateway:
 
     ``quantum`` bounds how many decode steps an engine runs before control
     returns to the rotation (1 = finest interleaving, higher amortizes
-    dispatch overhead).  ``interleave=False`` degrades to the legacy
-    drain-to-completion order — the baseline the p95 benchmark gates
-    against.
+    dispatch overhead).  ``quantum_tokens`` switches the quantum to
+    bounded TOKEN work instead of a step count — the right unit under
+    chunked prefill, where one step may spend a whole chunk of prompt
+    tokens on top of its decode batch — so a rotation hands every engine
+    a comparable slice of compute regardless of how its steps split
+    between prefill chunks and decode.  ``interleave=False`` degrades to
+    the legacy drain-to-completion order — the baseline the p95 benchmark
+    gates against.
     """
 
-    def __init__(self, runtime, quantum: int = 2, interleave: bool = True):
+    def __init__(self, runtime, quantum: int = 2, interleave: bool = True,
+                 quantum_tokens: Optional[int] = None):
         self.runtime = runtime
         self.quantum = quantum
+        self.quantum_tokens = quantum_tokens
         self.interleave = interleave
         self._live: list[InvocationHandle] = []
         self._rr = 0                     # round-robin offset over engines
@@ -241,6 +248,18 @@ class InvocationGateway:
         rt._prune(now)
         prompt = np.asarray(request.prompt, np.int32).reshape(-1)
         rt._validate(request.fn_name, prompt, request.max_new_tokens)
+        if (request.deadline_s is not None
+                and time.perf_counter() - now > request.deadline_s):
+            # dead on arrival against the request's OWN clock: a replayed
+            # request whose backdated ``arrival_s`` already overran its
+            # deadline (the replay fell behind wall-clock) is shed here,
+            # before forking an engine or spending any prefill — the shed
+            # decision honors the intended arrival, not the submit call
+            handle = InvocationHandle(self, request, -1, None, None,
+                                      "shed", None)
+            handle.submit_s = now
+            handle._state = SHED
+            return handle
         key, engine, kind, stats = rt._engine_for(request.fn_name,
                                                   request.event, now)
         handle = InvocationHandle(self, request, -1, key, engine, kind,
@@ -355,10 +374,12 @@ class InvocationGateway:
             if owner is not None and owner is not engine:
                 continue
             try:
-                if self.interleave:
-                    engine.step_n(self.quantum)
-                else:
+                if not self.interleave:
                     engine.run()
+                elif self.quantum_tokens is not None:
+                    engine.step_tokens(self.quantum_tokens)
+                else:
+                    engine.step_n(self.quantum)
             except PoolExhausted:
                 # the engine dropped the one doomed request and recorded
                 # its 'failed' result — THAT handle raises the typed

@@ -25,6 +25,14 @@ never stalls waiting for a page — while the arena is still sized for the
 sum of actual request lengths rather than ``n_slots * max_len``.
 Exhaustion raises :class:`PoolExhausted` instead of hanging admission.
 
+Chunked prefill relaxes that to an INCREMENTAL reservation: ``alloc(...,
+budget_tokens=n)`` reserves only the pages covering the first prefill
+chunk, and ``extend_budget`` grows the reservation chunk by chunk as the
+cursor advances (to the full worst case before the final chunk, so the
+decode phase keeps the deadlock-free invariant above).  A long prompt
+therefore no longer locks its whole page span at admission time — short
+requests admit alongside it out of the same arena.
+
 Prefix sharing (copy-on-write): every page carries a REFCOUNT.  A
 :class:`PrefixHandle` pins a span of already-filled prompt-prefix pages
 (TIDAL's template-baked warm state, at the KV level); ``alloc(...,
@@ -228,7 +236,8 @@ class PagedKVCachePool:
     # ---- alloc / grow / release ------------------------------------------
     def alloc(self, prompt_len: int, max_new_tokens: int,
               shared_prefix: Optional[PrefixHandle] = None,
-              reuse_len: int = 0) -> int:
+              reuse_len: int = 0,
+              budget_tokens: Optional[int] = None) -> int:
         """Claim a slot and reserve the request's worst-case block count.
 
         With ``shared_prefix``, the first ``reuse_len`` tokens of the
@@ -237,6 +246,12 @@ class PagedKVCachePool:
         trailing partial page — ``reuse_len`` ending mid-page — is copied
         once into a fresh page the slot owns exclusively, so later writes
         never touch the donor (copy-on-write).
+
+        ``budget_tokens`` caps the INITIAL reservation at the pages
+        covering that many tokens instead of the worst case (chunked
+        prefill: the engine grows the budget via :meth:`extend_budget` as
+        chunks land).  The worst case is still validated against the
+        arena/slot capacity so an admission can never be unservable.
         """
         total = self.blocks_for(prompt_len + max_new_tokens)
         if total > self.blocks_per_slot:
@@ -264,7 +279,14 @@ class PagedKVCachePool:
             n_full = reuse_len // self.page_size
         partial = (shared_prefix is not None and reuse_len > 0
                    and reuse_len % self.page_size != 0)
-        fresh = total - n_full              # incl. the COW partial page
+        budget = total
+        if budget_tokens is not None:
+            if budget_tokens <= reuse_len:
+                raise ValueError(
+                    f"budget_tokens={budget_tokens} must cover the reused "
+                    f"prefix ({reuse_len} tokens) plus at least one more")
+            budget = min(total, self.blocks_for(budget_tokens))
+        fresh = budget - n_full             # incl. the COW partial page
         if not self._free_slots:
             raise PoolExhausted("PagedKVCachePool exhausted: no free slots")
         if fresh > self.n_available_pages:
@@ -292,12 +314,39 @@ class PagedKVCachePool:
             self.page_table[slot, mapped] = page
             mapped += 1
             self.stats["cow_page_copies"] += 1
-        self._reserved += total - mapped
-        self._budget[slot] = total
+        self._reserved += budget - mapped
+        self._budget[slot] = budget
         self._mapped[slot] = mapped
         if mapped:
             self._touch(slot)
         return slot
+
+    def extend_budget(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s reserved block budget to cover ``n_tokens``
+        total tokens (chunked prefill: called before each chunk, and with
+        the full ``prompt + max_new`` before the final one so decode keeps
+        the reservation invariant).  Returns False — no state change —
+        when the free pool cannot back the extra reservation right now;
+        the caller retries after retirements free pages."""
+        if slot not in self._budget:
+            raise ValueError(f"slot {slot} is not allocated")
+        need = self.blocks_for(n_tokens)
+        if need > self.blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens needs {need} pages but a "
+                f"slot's page table holds {self.blocks_per_slot}")
+        extra = need - self._budget[slot]
+        if extra <= 0:
+            return True
+        if extra > self.n_available_pages:
+            return False
+        self._budget[slot] = need
+        self._reserved += extra
+        return True
+
+    def slot_budget(self, slot: int) -> int:
+        """Currently reserved block budget of an allocated slot."""
+        return self._budget[slot]
 
     def ensure_len(self, slot: int, n_tokens: int) -> None:
         """Map pages so positions ``0 .. n_tokens-1`` are backed."""

@@ -1,0 +1,301 @@
+"""Chunked prefill fused into the decode quantum (mixed batched steps).
+
+Per attention family the greedy tokens must be bit-identical chunked vs
+unchunked vs the sequential Engine — including a prefix-reuse hit whose
+suffix chunks across multiple steps; incremental page budgets must stop
+a long prompt from starving short requests of pages at admission; a
+cancel landing between chunks must return every page refcount-safely;
+and the gateway's deadline shed must honor a replayed request's
+backdated arrival clock."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api as tidal
+from repro.models.registry import get_smoke_model
+from repro.runtime.continuous import ContinuousBatchingEngine
+from repro.runtime.engine import Engine
+from repro.runtime.faas import FaaSRuntime
+from repro.runtime.gateway import DeadlineExceeded, InvocationRequest
+from repro.runtime.kv_pool import PagedKVCachePool
+from repro.runtime.prefix import PrefixIndex
+
+MAX_LEN = 32
+PS = 4
+FAMILIES = ["smollm-135m", "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b"]
+
+
+def _model(arch="smollm-135m", n_layers=2):
+    return get_smoke_model(arch, n_layers=n_layers)
+
+
+def _requests(m, seed=0, spec=((21, 5), (4, 6), (17, 3), (9, 4))):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, m.cfg.vocab_size, size=n).astype(np.int32), mn)
+            for n, mn in spec]
+
+
+def _sequential_tokens(m, params, reqs):
+    eng = Engine(m, params, donate_cache=False)
+    return [eng.generate(p[None], max_new_tokens=n,
+                         cache_len=MAX_LEN).tokens[0] for p, n in reqs]
+
+
+def _run(m, params, reqs, chunk, n_slots=3, **kw):
+    eng = ContinuousBatchingEngine(m, params, n_slots=n_slots,
+                                   max_len=MAX_LEN, page_size=PS,
+                                   chunk_tokens=chunk, **kw)
+    ids = [eng.submit(p, mn) for p, mn in reqs]
+    out = eng.run()
+    return eng, [out[i] for i in ids]
+
+
+def _bake(pool, m, params, prefix):
+    cache = m.make_cache(1, pool.padded_len)
+    _, cache = jax.jit(lambda p, i, c: m.prefill(p, i, c))(
+        params, {"tokens": jnp.asarray(prefix[None, :])}, cache)
+    return pool.bake_prefix(cache, prefix)
+
+
+# ---------------------------------------------------------------------------
+# mixed-step parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_mixed_step_parity_per_family(arch):
+    """Greedy tokens are bit-identical with prefill chunked into the step
+    loop (several chunk sizes, incl. one that forces a partial final
+    chunk) vs the unchunked engine vs the sequential reference."""
+    m = _model(arch)
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _requests(m)
+    want = _sequential_tokens(m, params, reqs)
+    _, base = _run(m, params, reqs, None)
+    for r, w in zip(base, want):
+        np.testing.assert_array_equal(r.tokens, w)
+    for chunk in (PS, 2 * PS, 7):        # 7 rounds up to 2 pages
+        _, outs = _run(m, params, reqs, chunk)
+        for r, w in zip(outs, want):
+            assert r.status == "done"
+            np.testing.assert_array_equal(r.tokens, w)
+
+
+def test_chunked_prefill_interleaves_decode():
+    """A short request admitted behind a long cold prompt gets its first
+    token BEFORE the long prefill completes (the whole point): emission
+    order flips relative to the unchunked engine."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    long_p = rng.integers(1, m.cfg.vocab_size, 24).astype(np.int32)
+    short_p = rng.integers(1, m.cfg.vocab_size, 4).astype(np.int32)
+
+    def first_token_order(chunk):
+        eng = ContinuousBatchingEngine(m, params, n_slots=2,
+                                       max_len=MAX_LEN, page_size=PS,
+                                       chunk_tokens=chunk)
+        order = []
+        cb = lambda rid, tok, idx: idx == 0 and order.append(rid)
+        a = eng.submit(long_p, 4, token_cb=cb)
+        b = eng.submit(short_p, 4, token_cb=cb)
+        eng.run()
+        return [order.index(a), order.index(b)]
+
+    assert first_token_order(None) == [0, 1]     # long admits + prefills first
+    assert first_token_order(PS) == [1, 0]       # short overtakes mid-prefill
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_reuse_hit_mid_prompt_chunked(arch):
+    """A prefix hit whose suffix still exceeds the chunk budget chunks
+    ``prefill_from`` across the suffix: tokens stay bit-identical and the
+    reuse is accounted."""
+    m = _model(arch)
+    params = m.init_params(jax.random.PRNGKey(0))
+    prefix = (np.arange(8, dtype=np.int32) + 1) % m.cfg.vocab_size
+    rng = np.random.default_rng(2)
+    reqs = [(np.concatenate([prefix, rng.integers(
+        1, m.cfg.vocab_size, s).astype(np.int32)]), n)
+        for s, n in ((16, 4), (12, 3))]
+    want = _sequential_tokens(m, params, reqs)
+
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    h = _bake(pool, m, params, prefix)
+    idx = PrefixIndex(PS)
+    idx.register(h)
+    eng = ContinuousBatchingEngine(m, params, pool=pool, prefix_index=idx,
+                                   chunk_tokens=PS)
+    ids = [eng.submit(p, n) for p, n in reqs]
+    out = eng.run()
+    for i, w in zip(ids, want):
+        assert out[i].reused_prefix_len == len(prefix)
+        np.testing.assert_array_equal(out[i].tokens, w)
+
+
+# ---------------------------------------------------------------------------
+# incremental page budgets
+# ---------------------------------------------------------------------------
+
+def test_chunked_admission_no_starvation():
+    """Regression: worst-case reservation let one long prompt hog the
+    arena at admission time.  Chunked admission reserves only the next
+    chunk, so the short request admits alongside and finishes FIRST while
+    the long prefill is still cursoring — and both stay bit-identical."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    long_p = rng.integers(1, m.cfg.vocab_size, 24).astype(np.int32)
+    short_p = rng.integers(1, m.cfg.vocab_size, 4).astype(np.int32)
+    want = _sequential_tokens(m, params, [(long_p, 4), (short_p, 4)])
+
+    # 8 allocatable pages: the long request alone needs 7 up front, so
+    # worst-case reservation starves the short one (2 pages) at admission
+    def build(chunk):
+        eng = ContinuousBatchingEngine(m, params, n_slots=2,
+                                       max_len=MAX_LEN, page_size=PS,
+                                       n_pages=9, chunk_tokens=chunk)
+        a = eng.submit(long_p, 4)
+        b = eng.submit(short_p, 4)
+        return eng, a, b
+
+    eng, a, b = build(None)
+    eng.step()
+    assert len(eng.active) == 1          # short starved behind the long
+    eng.run()
+
+    eng, a, b = build(PS)
+    eng.step()
+    assert len(eng.active) == 2          # both admitted on the first step
+    out = eng.run()
+    assert out[b].e2e_s <= out[a].e2e_s
+    np.testing.assert_array_equal(out[a].tokens, want[0])
+    np.testing.assert_array_equal(out[b].tokens, want[1])
+
+
+def test_alloc_budget_and_extend():
+    """Pool-level bookkeeping: a budgeted alloc reserves only the budget's
+    pages; extend_budget grows it (False = retry later, never a raise)
+    and the full reservation is restored before release."""
+    m = _model(n_layers=1)
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS,
+                            n_pages=9)
+    base = pool.n_available_pages
+    slot = pool.alloc(24, 4, budget_tokens=PS)
+    assert pool.slot_budget(slot) == 1
+    assert pool.n_available_pages == base - 1
+    assert pool.extend_budget(slot, 2 * PS)
+    assert pool.slot_budget(slot) == 2
+    assert pool.extend_budget(slot, PS)          # shrink is a no-op
+    assert pool.slot_budget(slot) == 2
+    other = pool.alloc(20, 4, budget_tokens=20 + 4)   # 6 pages, worst case
+    assert not pool.extend_budget(slot, 28)      # 7 needed, 0 available
+    pool.release(other)
+    assert pool.extend_budget(slot, 28)
+    pool.release(slot)
+    assert pool.n_available_pages == base
+    with pytest.raises(ValueError):
+        pool.alloc(24, 4, reuse_len=8, budget_tokens=8)  # budget <= reuse
+
+
+# ---------------------------------------------------------------------------
+# cancel between chunks
+# ---------------------------------------------------------------------------
+
+def test_cancel_between_chunks_returns_pages():
+    """Cancelling a request whose cursor is mid-prompt releases every
+    mapped page and the budget reservation; aliased prefix pages drop
+    their refcount without being freed."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prefix = (np.arange(8, dtype=np.int32) + 1) % m.cfg.vocab_size
+    pool = PagedKVCachePool(m, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    h = _bake(pool, m, params, prefix)
+    idx = PrefixIndex(PS)
+    idx.register(h)
+    base_free = pool.n_free_pages
+    base_refs = pool.prefix_page_refs(h)
+
+    rng = np.random.default_rng(4)
+    prompt = np.concatenate([prefix, rng.integers(
+        1, m.cfg.vocab_size, 16).astype(np.int32)])
+    eng = ContinuousBatchingEngine(m, params, pool=pool, prefix_index=idx,
+                                   chunk_tokens=PS)
+    rid = eng.submit(prompt, 4)
+    eng.step()
+    st = next(iter(eng.active.values()))
+    assert st.prefilling and len(prefix) < st.cursor < len(prompt)
+    assert pool.prefix_page_refs(h) != base_refs     # borrowed mid-prefill
+    assert eng.cancel(rid)
+    assert pool.n_free_pages == base_free
+    assert pool.prefix_page_refs(h) == base_refs
+    assert eng.results[rid].status == "cancelled"
+    assert eng.results[rid].n_generated == 0
+    assert not eng.step()                            # drained, pool intact
+
+    # the arena is fully reusable afterwards
+    rid2 = eng.submit(prompt, 3)
+    out = eng.run()
+    want = _sequential_tokens(m, params, [(prompt, 3)])[0]
+    np.testing.assert_array_equal(out[rid2].tokens, want)
+
+
+# ---------------------------------------------------------------------------
+# gateway: token quantum + backdated deadline shed
+# ---------------------------------------------------------------------------
+
+def test_faas_chunked_end_to_end_parity():
+    """chunk_tokens threads FaaSRuntime -> engines -> gateway (token
+    quantum): greedy results match the unchunked runtime bit for bit."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    reqs = _requests(m, seed=5, spec=((21, 4), (4, 5), (17, 3)))
+    want = _sequential_tokens(m, params, reqs)
+
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=PS,
+                     prewarm=False, chunk_tokens=2 * PS)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    assert rt.gateway.quantum_tokens == 2 * PS
+    handles = [rt.submit(InvocationRequest("fn", p, max_new_tokens=n))
+               for p, n in reqs]
+    for h, w in zip(handles, want):
+        np.testing.assert_array_equal(h.result().tokens, w)
+    assert all(w.engine.chunk_tokens == 2 * PS
+               for w in rt._engines.values())
+
+
+def test_replayed_past_deadline_request_sheds_deterministically():
+    """Regression: shed must honor the request's OWN (backdated) clock.
+    A replayed request whose intended arrival already overran its
+    deadline is shed at submit — before forking an engine — while the
+    rest of the trace serves normally."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=PS,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    prompt = np.arange(6, dtype=np.int32) % m.cfg.vocab_size
+
+    # direct submit with a backdated arrival already past its deadline
+    doa = rt.submit(InvocationRequest(
+        "fn", prompt, max_new_tokens=4, deadline_s=0.5,
+        arrival_s=time.perf_counter() - 5.0))
+    assert doa.status == "shed" and doa.done
+    assert doa.engine is None                    # no fork was spent
+    with pytest.raises(DeadlineExceeded):
+        doa.result()
+
+    # replay: a negative offset backdates the arrival past the deadline
+    handles = rt.gateway.replay([
+        (-5.0, InvocationRequest("fn", prompt, max_new_tokens=4,
+                                 deadline_s=1.0)),
+        (0.0, InvocationRequest("fn", prompt, max_new_tokens=4)),
+    ])
+    assert handles[0].status == "shed"
+    with pytest.raises(DeadlineExceeded):
+        handles[0].result()
+    res = handles[1].result()
+    assert res.status == "done" and len(res.tokens) == 4

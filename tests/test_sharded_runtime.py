@@ -284,6 +284,95 @@ def test_faas_mesh_template_prefix_bakes_per_instance(mesh_runtime):
             assert pool.n_free_pages == pool.n_pages - 1
 
 
+# ---------------------------------------------------------------------------
+# Pallas attention under SPMD (shard_map over the 'model' axis)
+# ---------------------------------------------------------------------------
+
+def test_sharded_pallas_paged_decode_no_fallback(monkeypatch):
+    """attn_impl='pallas' under a ShardingPlan runs the paged-decode
+    KERNEL shard_map'd over 'model' — the XLA reference must never be
+    hit — and stays token-identical to the single-device XLA engine,
+    with prefill chunked into the step loop on top."""
+    from repro.kernels import ref
+
+    kw = dict(n_layers=2, n_heads=8, n_kv_heads=8, head_dim=16)
+    mp = get_smoke_model("qwen3-14b", attn_impl="pallas", **kw)
+    mx = get_smoke_model("qwen3-14b", attn_impl="xla", **kw)
+    params = mx.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(mx.cfg.vocab_size, seed=11, n=3)
+    want = _sequential_tokens(mx, params, reqs)
+
+    def boom(*a, **k):
+        raise AssertionError("pallas path fell back to the XLA reference")
+    monkeypatch.setattr(ref, "paged_decode_attention_ref", boom)
+
+    cbe = ContinuousBatchingEngine(mp, params, n_slots=2, max_len=MAX_LEN,
+                                   page_size=4, plan=_tp_plan(),
+                                   chunk_tokens=8)
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+    assert any(_is_distributed(l) for l in jax.tree.leaves(cbe.pool.cache))
+
+
+def test_sharded_pallas_flash_attention_kernel(monkeypatch):
+    """flash_attention with mesh= shard_maps the kernel over the head
+    axes — equal heads and GQA — matching the reference bit for bit; head
+    counts the mesh cannot split fall back to one unwrapped kernel call."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    want_ref = ref.flash_attention_ref
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(kq, (2, 8, 16, 16), jnp.float32)
+    k = jax.random.normal(kk, (2, 8, 16, 16), jnp.float32)
+    v = jax.random.normal(kv, (2, 8, 16, 16), jnp.float32)
+
+    mesh8 = jax.make_mesh((1, 8), ("data", "model"))
+    got = ops.flash_attention(q, k, v, causal=True, mesh=mesh8)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want_ref(q, k, v, causal=True)),
+                               atol=2e-5)
+    # GQA: 8 q heads onto 4 kv heads, 4-way model axis — the grouped
+    # head mapping must stay local to each shard
+    mesh4 = jax.make_mesh((2, 4), ("data", "model"))
+    got = ops.flash_attention(q, k[:, :4], v[:, :4], causal=True, mesh=mesh4)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(want_ref(q, k[:, :4], v[:, :4], causal=True)), atol=2e-5)
+    # 3 heads cannot split 8 ways: unwrapped single kernel call, no error
+    got = ops.flash_attention(q[:, :3], k[:, :3], v[:, :3], causal=True,
+                              mesh=mesh8)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(want_ref(q[:, :3], k[:, :3], v[:, :3], causal=True)),
+        atol=2e-5)
+
+
+def test_sharded_streamed_prefill_mid_flight_mla():
+    """MLA (latent-KV attention) admission while the sharded weight
+    stream is in flight: the layer-streamed prefill path — including a
+    suffix at ``offset=`` through chunked prefill — stays
+    token-identical."""
+    m = get_smoke_model("deepseek-v3-671b", n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(4))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=5)
+    want = _sequential_tokens(m, params, reqs)
+    plan = _tp_plan()
+    srv = TemplateServer(trace_batch=1, trace_seq=8, plan=plan)
+    srv.register(tidal.static_function("f", m, params), {})
+    session, _ = srv.fork("f", {})
+    cbe = ContinuousBatchingEngine(m, session, n_slots=2, max_len=MAX_LEN,
+                                   plan=plan, page_size=4, chunk_tokens=4)
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    assert any(o.streamed_prefill for o in out.values())
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+
+
 def test_sharded_prefill_entry_points_carry_shardings():
     """The shared serve fns are built with explicit in/out shardings: a
     decode step keeps the arena's NamedSharding across donation."""

@@ -41,6 +41,33 @@ def test_streamed_prefill_exact(smoke_setup):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("arch", ["smollm-135m", "phi3.5-moe-42b-a6.6b",
+                                  "deepseek-v3-671b"])
+def test_streamed_prefill_offset_per_family(arch):
+    """streamed_prefill(offset=) — the suffix path chunked prefill and
+    prefix reuse ride while weights are in flight — must equal both
+    ``prefill_from`` and a monolithic full prefill bit-for-bit on every
+    attention family, INCLUDING MLA's latent cache (positions, RoPE and
+    mask all carry the offset)."""
+    m = get_smoke_model(arch, n_layers=2)
+    params = m.init_params(jax.random.PRNGKey(0))
+    srv = TemplateServer(trace_batch=1, trace_seq=16)
+    srv.register(tidal.static_function("f", m, params), {})
+    sess, _ = srv.fork("f", {})
+    toks = jnp.asarray(make_prompts(m.cfg.vocab_size, 1, 16))
+    lg_r, cache_r = m.prefill(params, {"tokens": toks}, m.make_cache(1, 16))
+    _, cache_p = m.prefill(params, {"tokens": toks[:, :8]},
+                           m.make_cache(1, 16))
+    lg_s, cache_s = streamed_prefill(sess, {"tokens": toks[:, 8:]},
+                                     cache_p, offset=8)
+    lg_f, cache_f = m.prefill_from(params, {"tokens": toks[:, 8:]},
+                                   cache_p, jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_f))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_r))
+    for a, b in zip(jax.tree.leaves(cache_s), jax.tree.leaves(cache_r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_streaming_follows_traced_order(smoke_setup):
     m, params, srv = smoke_setup
     sess, _ = srv.fork("smol", {})
