@@ -7,7 +7,14 @@ overlaps more loading).
 smoke-scale model (CPU): the same mixed-length workload served at the same
 concurrency through the dense slot pool and the block-paged pool, reporting
 resident KV bytes, the max concurrency each layout affords at the dense
-pool's HBM budget, and greedy token parity between the two paths."""
+pool's HBM budget, and greedy token parity between the two paths.
+
+``--kv-dtype int8 --measured`` appends the quantized-arena comparison: the
+same workload served at matched concurrency through an fp paged arena and
+an int8 one (per-row scales, dequantized INSIDE the Pallas decode kernel —
+the XLA oracle is monkeypatched to raise, so a silent fallback fails the
+run).  Gates: >= 1.8x lower resident KV bytes, exact first generated token
+per request, and bounded greedy divergence over the full completions."""
 
 import sys
 
@@ -76,7 +83,90 @@ def paged_rows(arch: str = "llama3-8b", n_layers: int = 2,
     return rows
 
 
-def main(paged: bool = False):
+def int8_rows(arch: str = "llama3-8b", n_layers: int = 2,
+              n_slots: int = 4, max_len: int = 64, page_size: int = 8,
+              max_divergence: float = 0.25):
+    """Serve one mixed-length batch through an fp and an int8 paged arena.
+
+    Both engines run the Pallas paged-decode kernel (``attn_impl='pallas'``)
+    at the same slot/page capacity; the int8 engine's decode is proven to
+    stay on the in-kernel dequant path by monkeypatching the XLA oracle to
+    raise.  Gates: resident-bytes ratio >= 1.8x, first token exact per
+    request (prefill is fp in both arenas), full-completion divergence
+    <= ``max_divergence``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.models.registry import get_smoke_model
+    from repro.runtime.continuous import ContinuousBatchingEngine
+
+    rng = np.random.default_rng(0)
+    vocab = get_smoke_model(arch, n_layers=n_layers).cfg.vocab_size
+    reqs = [(rng.integers(0, vocab, s).astype(np.int32), n)
+            for s, n in [(6, 4), (40, 8), (12, 6), (50, 8)]]
+    blocks = sum(-(-(len(p) + n) // page_size) for p, n in reqs)
+    n_pages = 1 + blocks
+
+    def serve(kv_dtype, guard_no_fallback=False):
+        m = get_smoke_model(arch, n_layers=n_layers, attn_impl="pallas")
+        params = m.init_params(jax.random.PRNGKey(0))
+        eng = ContinuousBatchingEngine(m, params, n_slots=n_slots,
+                                       max_len=max_len,
+                                       page_size=page_size,
+                                       n_pages=n_pages, kv_dtype=kv_dtype)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        if guard_no_fallback:
+            orig = ref.paged_decode_attention_ref
+
+            def boom(*a, **k):
+                raise AssertionError(
+                    "paged decode fell back to the XLA oracle")
+            ref.paged_decode_attention_ref = boom
+            try:
+                res = eng.run()
+            finally:
+                ref.paged_decode_attention_ref = orig
+        else:
+            res = eng.run()
+        return eng, [np.asarray(res[r].tokens) for r in rids]
+
+    fp_eng, fp_toks = serve(None)
+    q_eng, q_toks = serve("int8", guard_no_fallback=True)
+
+    fp_res = fp_eng.pool.peak_used_pages * fp_eng.pool.page_nbytes()
+    q_res = q_eng.pool.peak_used_pages * q_eng.pool.page_nbytes()
+    ratio = fp_res / q_res
+    first_ok = all(a[0] == b[0] for a, b in zip(fp_toks, q_toks))
+    total = sum(len(a) for a in fp_toks)
+    diff = sum(int(np.sum(a != b)) for a, b in zip(fp_toks, q_toks))
+    divergence = diff / total
+    rows = [
+        ("int8/fp_resident_kv_bytes", fp_res,
+         f"peak_pages={fp_eng.pool.peak_used_pages}"),
+        ("int8/int8_resident_kv_bytes", q_res,
+         f"saving={ratio:.2f}x (gate>=1.8x)"),
+        ("int8/first_token_exact", "ok" if first_ok else "MISMATCH",
+         f"{len(reqs)}_requests"),
+        ("int8/greedy_divergence", round(divergence, 4),
+         f"{diff}/{total}_tokens (gate<={max_divergence})"),
+        ("int8/pallas_dequant_no_fallback", "ok",
+         "xla_oracle_monkeypatched"),
+    ]
+    if ratio < 1.8:
+        raise SystemExit(
+            f"int8 arena saves only {ratio:.2f}x resident bytes (< 1.8x)")
+    if not first_ok:
+        raise SystemExit("int8 arena diverged on a FIRST token (prefill "
+                         "is fp — the first sample must match exactly)")
+    if divergence > max_divergence:
+        raise SystemExit(
+            f"int8 greedy divergence {divergence:.3f} > {max_divergence}")
+    return rows
+
+
+def main(paged: bool = False, kv_int8: bool = False):
     rows = []
     for arch in ("llama3-8b", "llama2-13b"):
         plan = plan_for(arch, 1, 2048)
@@ -103,8 +193,19 @@ def main(paged: bool = False):
                          "GiB_to_reach_warm_ttft"))
     if paged:
         rows += paged_rows()
+    if kv_int8:
+        rows += int8_rows()
     return emit(rows, header=("name", "value", "derived"))
 
 
+def _cli_kv_int8(argv) -> bool:
+    if "--kv-dtype" not in argv:
+        return False
+    val = argv[argv.index("--kv-dtype") + 1:][:1]
+    if val != ["int8"]:
+        raise SystemExit(f"--kv-dtype supports only 'int8' (got {val})")
+    return True
+
+
 if __name__ == "__main__":
-    main(paged="--paged" in sys.argv)
+    main(paged="--paged" in sys.argv, kv_int8=_cli_kv_int8(sys.argv))

@@ -1,5 +1,4 @@
-"""Flash-decoding: single-token attention against a long KV cache, as a
-Pallas TPU kernel.
+"""Flash-decoding over a dense per-slot KV cache as a Pallas TPU kernel.
 
 TPU adaptation notes:
   * decode attention is MEMORY-bound (one query row vs a 32k..500k cache);
@@ -29,6 +28,13 @@ NEG_INF = float(np.finfo(np.float32).min)
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
             *, scale: float, bk: int, nk: int):
+    """Grid point (b, h, t): one [bk, d] KV block of batch b, KV head h.
+
+    ``len_ref`` is the [1] per-batch length in SMEM.  Scratch: ``acc_ref``
+    [G, d] fp32 accumulator, ``m_ref``/``l_ref`` [G, 1] running max /
+    normalizer — persistent across the innermost (sequential) KV-block
+    axis, initialized at t == 0, emitted at t == nk-1.
+    """
     t = pl.program_id(2)
 
     @pl.when(t == 0)
@@ -69,8 +75,18 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
 def decode_attention(q, k, v, length, *, block_k: int = 256,
                      interpret: bool | None = None):
-    """q: [B, H, d]; k,v: [B, KV, T, d]; length: scalar or [B] valid
-    positions.  Returns [B, H, d]."""
+    """Single-token attention against a dense [B, KV, T, d] cache.
+
+    Args:
+      q: [B, H, d] query block (one decode token per sequence).
+      k, v: [B, KV, T, d] head-major KV cache.
+      length: scalar or [B] valid cache positions per sequence.
+      block_k: KV tile size (clamped to T; must divide it).
+      interpret: force Pallas interpret mode (defaults to CPU backend).
+
+    Returns:
+      [B, H, d] attention output in ``q.dtype``.
+    """
     B, H, d = q.shape
     KV, T = k.shape[1], k.shape[2]
     assert H % KV == 0

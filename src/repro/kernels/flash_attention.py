@@ -33,6 +33,12 @@ NEG_INF = float(np.finfo(np.float32).min)
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
             *, scale: float, causal: bool, softcap: float,
             bq: int, bk: int, nk: int):
+    """Grid point (b, h, s, t): Q tile s against KV tile t of head h.
+
+    Scratch: ``acc_ref`` [bq, d] fp32 accumulator, ``m_ref``/``l_ref``
+    [bq, 1] running max / normalizer — persistent across the innermost
+    (sequential) KV axis, initialized at t == 0, emitted at t == nk-1.
+    """
     t = pl.program_id(3)
     s = pl.program_id(2)
 
@@ -80,7 +86,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 def flash_attention(q, k, v, *, causal: bool = True, softcap: float = 0.0,
                     block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
                     interpret: bool | None = None):
-    """q: [B, H, S, d]; k,v: [B, KV, T, d] -> [B, H, S, d]."""
+    """Multi-token (prefill) attention, causal by default.
+
+    Args:
+      q: [B, H, S, d] queries.
+      k, v: [B, KV, T, d] keys/values (GQA: H a multiple of KV).
+      causal: apply the causal mask (requires S == T).
+      softcap: logit soft-capping (0 disables).
+      block_q, block_k: Q/KV tile sizes (clamped; must divide S/T).
+      interpret: force Pallas interpret mode (defaults to CPU backend).
+
+    Returns:
+      [B, H, S, d] attention output in ``q.dtype``.
+    """
     B, H, S, d = q.shape
     KV, T = k.shape[1], k.shape[2]
     assert H % KV == 0

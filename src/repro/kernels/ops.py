@@ -68,40 +68,79 @@ def flash_attention(q, k, v, causal: bool = True, softcap: float = 0.0,
     return _flash_pallas(q, k, v, causal=causal, block_q=bq, block_k=bk)
 
 
-def decode_attention(q, k, v, length, impl: str = "pallas"):
+def decode_attention(q, k, v, length, impl: str = "pallas", mesh=None):
     """q: [B, H, d]; k,v: [B, KV, T, d] -> [B, H, d]."""
     if impl == "xla":
         return ref.decode_attention_ref(q, k, v, length)
+    if _model_shards(mesh, q.shape[1], k.shape[1]) > 1:
+        # dense-pool decode under TP: heads split over 'model', the
+        # per-sequence lengths are replicated control state (broadcast to
+        # [B] OUTSIDE shard_map so every shard sees the same vector)
+        length = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1),
+                                  (q.shape[0],))
+        hs = P(None, "model", None, None)
+        return shard_map(
+            lambda qs, ks, vs, ln: decode_attention(qs, ks, vs, ln,
+                                                    impl=impl),
+            mesh=mesh,
+            in_specs=(P(None, "model", None), hs, hs, P(None)),
+            out_specs=P(None, "model", None),
+            check_rep=False)(q, k, v, length)
     bk = _pick_block(k.shape[2], want=256)
     return _decode_pallas(q, k, v, length, block_k=bk)
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
+                           k_scales=None, v_scales=None,
                            impl: str = "pallas", mesh=None):
     """q: [B, H, d]; k_pages, v_pages: [P, ps, KV, d] (the page arena in the
-    model's storage layout); page_table: [B, NB]; lengths: scalar or [B].
-    Returns [B, H, d]."""
+    model's storage layout); page_table: [B, NB]; lengths: scalar or [B];
+    k_scales, v_scales: optional [P, ps, KV] per-row scales for an int8
+    arena (dequantized inside the kernel).  Returns [B, H, d]."""
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales, or neither")
     if impl == "xla":
         return ref.paged_decode_attention_ref(q, k_pages, v_pages,
-                                              page_table, lengths)
+                                              page_table, lengths,
+                                              k_scales=k_scales,
+                                              v_scales=v_scales)
     if _model_shards(mesh, q.shape[1], k_pages.shape[2]) > 1:
         # the arena's KV-head axis carries the plan's 'model' placement
         # (paged_cache_specs), so each shard attends its own head slice
         # against locally-resident pages; the page table and lengths are
         # replicated host-driven control state
+        if k_scales is None:
+            return shard_map(
+                lambda qs, ks, vs, pt, ln: paged_decode_attention(
+                    qs, ks, vs, pt, ln, impl=impl),
+                mesh=mesh,
+                in_specs=(P(None, "model", None),
+                          P(None, None, "model", None),
+                          P(None, None, "model", None), P(), P()),
+                out_specs=P(None, "model", None),
+                check_rep=False)(q, k_pages, v_pages, page_table, lengths)
+        # scale arenas shard with their value leaves' KV-head axis (or sit
+        # replicated if paged_cache_specs couldn't split it — but head
+        # divisibility was just checked, so 'model' applies here)
         return shard_map(
-            lambda qs, ks, vs, pt, ln: paged_decode_attention(
-                qs, ks, vs, pt, ln, impl=impl),
+            lambda qs, ks, vs, ksc, vsc, pt, ln: paged_decode_attention(
+                qs, ks, vs, pt, ln, k_scales=ksc, v_scales=vsc, impl=impl),
             mesh=mesh,
             in_specs=(P(None, "model", None), P(None, None, "model", None),
-                      P(None, None, "model", None), P(), P()),
+                      P(None, None, "model", None), P(None, None, "model"),
+                      P(None, None, "model"), P(), P()),
             out_specs=P(None, "model", None),
-            check_rep=False)(q, k_pages, v_pages, page_table, lengths)
+            check_rep=False)(q, k_pages, v_pages, k_scales, v_scales,
+                             page_table, lengths)
     # kernel wants the head-major arena [P, KV, ps, d] — same per-step
     # transpose the dense decode path pays for its [B, T, KV, hd] cache
+    if k_scales is not None:
+        k_scales = k_scales.transpose(0, 2, 1)        # -> [P, KV, ps]
+        v_scales = v_scales.transpose(0, 2, 1)
     return _paged_decode_pallas(q, k_pages.transpose(0, 2, 1, 3),
                                 v_pages.transpose(0, 2, 1, 3),
-                                page_table, lengths)
+                                page_table, lengths,
+                                k_scales=k_scales, v_scales=v_scales)
 
 
 def fused_rmsnorm(x, scale, eps: float = 1e-6, impl: str = "pallas"):

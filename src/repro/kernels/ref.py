@@ -53,7 +53,8 @@ def decode_attention_ref(q, k, v, length):
     return out.reshape(B, H, d).astype(q.dtype)
 
 
-def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths,
+                               k_scales=None, v_scales=None):
     """One-token attention against a block-paged KV cache.
 
     q: [B, H, d]; k_pages, v_pages: [P, ps, KV, d] — one shared page arena
@@ -61,12 +62,22 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
     page_table: [B, NB] int32 physical page per logical block;
     lengths: scalar or [B] valid positions.  Returns [B, H, d].
 
+    With ``k_scales``/``v_scales`` ([P, ps, KV] float32, storage layout)
+    the arena is int8 and each (page, position, head) row dequantizes as
+    ``row * scale`` — the oracle for the in-kernel dequantizing Pallas
+    variant.
+
     Semantics: gathering each sequence's pages in logical-block order must
     reproduce ``decode_attention_ref`` on the equivalent dense cache.
     """
     B, H, d = q.shape
     P, ps, KV, _ = k_pages.shape
     NB = page_table.shape[1]
+    if k_scales is not None:
+        k_pages = k_pages.astype(jnp.float32) * k_scales.astype(
+            jnp.float32)[..., None]
+        v_pages = v_pages.astype(jnp.float32) * v_scales.astype(
+            jnp.float32)[..., None]
     k = jnp.take(k_pages, page_table, axis=0)        # [B, NB, ps, KV, d]
     v = jnp.take(v_pages, page_table, axis=0)
     k = k.reshape(B, NB * ps, KV, d).transpose(0, 2, 1, 3)

@@ -137,6 +137,10 @@ def main():
                     help="chunked prefill: split prompts into page-multiple "
                          "chunks interleaved with decode; the gateway "
                          "quantum becomes this token budget")
+    ap.add_argument("--kv-dtype", choices=["int8"], default=None,
+                    help="quantize the paged KV arena (int8 values + "
+                         "per-row scales, dequantized inside the Pallas "
+                         "decode kernel); default keeps the fp arena")
     args = ap.parse_args()
 
     mesh = None
@@ -156,7 +160,8 @@ def main():
                      keep_alive_s=args.keep_alive,
                      trace_seq=args.prompt_len,
                      mesh=mesh,
-                     chunk_tokens=args.chunk_tokens)
+                     chunk_tokens=args.chunk_tokens,
+                     kv_dtype=args.kv_dtype)
 
     rng = np.random.default_rng(0)
     for i in range(args.functions):

@@ -201,20 +201,41 @@ def attention_block(
         b = jnp.arange(B)
         pages = page_table[b, cache_pos // ps]                   # [B]
         off = cache_pos % ps
-        ck = ck.at[pages, off].set(k[:, 0].astype(ck.dtype))
-        cv = cv.at[pages, off].set(v[:, 0].astype(cv.dtype))
-        new_cache = {"k": ck, "v": cv}
+        quantized = "k_scale" in kv_cache
+        if quantized:
+            # int8 arena: quantize this token's rows on append — values
+            # into the value leaf, per-row scales into its _scale leaf
+            from repro.models import quant
+            qk, sk = quant.quantize_rows(k[:, 0])     # [B,KV,hd], [B,KV]
+            qv, sv = quant.quantize_rows(v[:, 0])
+            ck = ck.at[pages, off].set(qk)
+            cv = cv.at[pages, off].set(qv)
+            cks = kv_cache["k_scale"].at[pages, off].set(sk)
+            cvs = kv_cache["v_scale"].at[pages, off].set(sv)
+            new_cache = {"k": ck, "k_scale": cks, "v": cv, "v_scale": cvs}
+        else:
+            cks = cvs = None
+            ck = ck.at[pages, off].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[pages, off].set(v[:, 0].astype(cv.dtype))
+            new_cache = {"k": ck, "v": cv}
         if cfg.attn_impl == "pallas":
             from repro.distributed.sharding import current_kernel_mesh
             from repro.kernels import ops as kops
             out = kops.paged_decode_attention(q[:, 0], ck, cv, page_table,
                                               cache_pos + 1,
+                                              k_scales=cks, v_scales=cvs,
                                               mesh=current_kernel_mesh())
             out = out[:, None]                                   # [B,1,H,hd]
         else:
             T = page_table.shape[1] * ps
             kg = jnp.take(ck, page_table, axis=0).reshape(B, T, KV, hd)
             vg = jnp.take(cv, page_table, axis=0).reshape(B, T, KV, hd)
+            if quantized:
+                from repro.models import quant
+                ksg = jnp.take(cks, page_table, axis=0).reshape(B, T, KV)
+                vsg = jnp.take(cvs, page_table, axis=0).reshape(B, T, KV)
+                kg = quant.dequantize_rows(kg, ksg, x.dtype)
+                vg = quant.dequantize_rows(vg, vsg, x.dtype)
             kv_pos = jnp.arange(T)[None, None, None, None, :]
             mask = kv_pos <= positions[:, :, None, None, None]
             qg = q.reshape(B, S, KV, G, hd)
@@ -232,12 +253,15 @@ def attention_block(
             cv = cv.at[b, cache_pos].set(v[:, 0].astype(cv.dtype))
         T = ck.shape[1]
         new_cache = {"k": ck, "v": cv}
-        if cfg.attn_impl == "pallas" and S == 1 and jnp.ndim(cache_pos) == 0:
-            # decode: flash-decoding kernel over the cache
+        if cfg.attn_impl == "pallas" and S == 1:
+            # decode: flash-decoding kernel over the cache (scalar or
+            # per-sequence [B] positions; under a ShardingPlan the wrapper
+            # shard_maps the kernel over the mesh's 'model' axis)
+            from repro.distributed.sharding import current_kernel_mesh
             from repro.kernels import ops as kops
             out = kops.decode_attention(
                 q[:, 0], ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
-                length=cache_pos + 1)
+                length=cache_pos + 1, mesh=current_kernel_mesh())
             out = out[:, None]                                       # [B,1,H,hd]
         else:
             kg, vg = ck, cv

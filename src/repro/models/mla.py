@@ -69,14 +69,32 @@ def mla_attention_block(
         b = jnp.arange(B)
         pages = page_table[b, cache_pos // ps]
         off = cache_pos % ps
-        cc = kv_cache["c_kv"].at[pages, off].set(
-            c_kv[:, 0].astype(kv_cache["c_kv"].dtype))
-        cr = kv_cache["k_rope"].at[pages, off].set(
-            k_rope[:, 0].astype(kv_cache["k_rope"].dtype))
-        new_cache = {"c_kv": cc, "k_rope": cr}
         T = page_table.shape[1] * ps
-        lat = jnp.take(cc, page_table, axis=0).reshape(B, T, kvr)
-        kr = jnp.take(cr, page_table, axis=0).reshape(B, T, dr)
+        if "c_kv_scale" in kv_cache:
+            # int8 arena: one scale per cached latent / rope-key row
+            from repro.models import quant
+            qc, sc = quant.quantize_rows(c_kv[:, 0])      # [B,kvr], [B]
+            qr_, sr = quant.quantize_rows(k_rope[:, 0])
+            cc = kv_cache["c_kv"].at[pages, off].set(qc)
+            cr = kv_cache["k_rope"].at[pages, off].set(qr_)
+            ccs = kv_cache["c_kv_scale"].at[pages, off].set(sc)
+            crs = kv_cache["k_rope_scale"].at[pages, off].set(sr)
+            new_cache = {"c_kv": cc, "c_kv_scale": ccs,
+                         "k_rope": cr, "k_rope_scale": crs}
+            lat = quant.dequantize_rows(
+                jnp.take(cc, page_table, axis=0).reshape(B, T, kvr),
+                jnp.take(ccs, page_table, axis=0).reshape(B, T), x.dtype)
+            kr = quant.dequantize_rows(
+                jnp.take(cr, page_table, axis=0).reshape(B, T, dr),
+                jnp.take(crs, page_table, axis=0).reshape(B, T), x.dtype)
+        else:
+            cc = kv_cache["c_kv"].at[pages, off].set(
+                c_kv[:, 0].astype(kv_cache["c_kv"].dtype))
+            cr = kv_cache["k_rope"].at[pages, off].set(
+                k_rope[:, 0].astype(kv_cache["k_rope"].dtype))
+            new_cache = {"c_kv": cc, "k_rope": cr}
+            lat = jnp.take(cc, page_table, axis=0).reshape(B, T, kvr)
+            kr = jnp.take(cr, page_table, axis=0).reshape(B, T, dr)
     elif kv_cache is not None:
         if jnp.ndim(cache_pos) == 0:
             cc = jax.lax.dynamic_update_slice(

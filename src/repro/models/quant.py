@@ -1,0 +1,64 @@
+"""Symmetric int8 row quantization for the paged KV arena.
+
+One "row" is the innermost feature vector of a cache leaf — a single
+(position, kv_head) head_dim vector for GQA K/V, or a single position's
+latent / rope-key vector for MLA — and each row carries its own float32
+scale (absmax / 127).  Per-row scales are the finest granularity the page
+arena supports without cross-token coupling: a decode step can append one
+token's rows without touching (or re-scaling) anything already written,
+which is what keeps copy-on-write prefix sharing and chunked-prefill
+rewrites exact.
+
+The transform is exactly idempotent through a round trip:
+``quantize(dequantize(q, s)) == (q, s)`` for every representable input,
+because the row's absmax element always lands on ±127 (or the scale floor
+re-engages for all-zero rows).  The pool's partial-page COW copies and
+chunked prefill's first-block rewrites rely on this — re-quantizing a
+dequantized block is a bit-exact no-op.
+
+Scale leaves ride INSIDE the cache pytree under ``<leaf>_scale`` keys
+(``k`` -> ``k_scale``), shaped like the value leaf minus its last axis.
+Keeping them in the same tree means page-indexed copies, refcounts, byte
+accounting, layer scans and sharding specs all treat scales and values as
+one unit for free.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SCALE_SUFFIX = "_scale"
+
+# absmax floor: rows of exact zeros (null page, never-written tail) keep a
+# representable scale instead of dividing by zero, and re-engage the same
+# floor on re-quantization (the round-trip exactness argument above)
+_EPS = 1e-8
+
+
+def is_quantized_cache(cache: dict) -> bool:
+    """True when ``cache`` carries int8 values + per-row scale leaves."""
+    return any(k.endswith(SCALE_SUFFIX) for k in cache)
+
+
+def value_keys(cache: dict) -> list:
+    """The non-scale keys of a (possibly quantized) cache dict."""
+    return [k for k in cache if not k.endswith(SCALE_SUFFIX)]
+
+
+def quantize_rows(x):
+    """Quantize ``[..., d]`` rows to (int8 ``[..., d]``, float32 ``[...]``).
+
+    Symmetric absmax scaling: ``scale = max(|row|, eps) / 127`` and values
+    round to ``[-127, 127]`` (the -128 code is unused, keeping the range
+    symmetric).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), _EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q, scale, dtype):
+    """Expand int8 rows back to ``dtype``: ``q * scale`` per row."""
+    out = q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+    return out.astype(dtype)

@@ -68,12 +68,17 @@ class Model:
         return not self.is_encdec and transformer.supports_paged_kv(self.cfg)
 
     def make_paged_cache(self, n_pages: int, page_size: int,
-                         abstract: bool = False, dtype=None):
-        """Shared block-paged KV arena (see ``transformer.make_paged_cache``)."""
+                         abstract: bool = False, dtype=None,
+                         kv_dtype: str | None = None):
+        """Shared block-paged KV arena (see ``transformer.make_paged_cache``).
+
+        ``kv_dtype='int8'`` quantizes the arena: int8 value leaves plus
+        per-row float32 ``<leaf>_scale`` arenas in the same pytree."""
         if self.is_encdec:
             raise ValueError(f"{self.cfg.name}: enc-dec has no paged KV layout")
         return transformer.make_paged_cache(self.cfg, n_pages, page_size,
-                                            abstract=abstract, dtype=dtype)
+                                            abstract=abstract, dtype=dtype,
+                                            kv_dtype=kv_dtype)
 
     # ---- training --------------------------------------------------------
     def forward(self, params, inputs: dict, training: bool = True):

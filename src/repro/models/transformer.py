@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models import ssm
+from repro.models import quant, ssm
 from repro.models.layers import (
     ParamFactory, attention_block, embed_tokens, lm_head, make_attn_params,
     make_mlp_params, mlp_block, rmsnorm)
@@ -186,24 +186,41 @@ def supports_paged_kv(cfg: ModelConfig) -> bool:
 
 
 def make_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                     abstract: bool = False, dtype=None) -> Cache:
+                     abstract: bool = False, dtype=None,
+                     kv_dtype: str | None = None) -> Cache:
     """One shared KV page arena: the (batch, max_len) axes of ``make_cache``
     become (n_pages, page_size).  Logical position ``t`` of a request lives
-    at ``[layer, page_table[slot, t // page_size], t % page_size]``."""
+    at ``[layer, page_table[slot, t // page_size], t % page_size]``.
+
+    ``kv_dtype='int8'`` makes the value leaves int8 and adds a per-row
+    float32 ``<leaf>_scale`` arena next to each (shape = value leaf minus
+    its last axis; one scale per (page, position, kv_head) head_dim row,
+    or per (page, position) latent row for MLA) — quantize-on-write,
+    dequantized inside the paged-decode kernel at read time."""
     if not supports_paged_kv(cfg):
         raise ValueError(
             f"{cfg.name}: {cfg.family!r} family has no paged KV layout")
+    if kv_dtype not in (None, "int8"):
+        raise ValueError(f"kv_dtype must be None or 'int8', got {kv_dtype!r}")
     dt = _dtype(cfg, dtype)
     L = cfg.n_layers
     if cfg.use_mla:
-        return {
-            "c_kv": _mk(abstract, (L, n_pages, page_size, cfg.kv_lora_rank), dt),
-            "k_rope": _mk(abstract, (L, n_pages, page_size, cfg.qk_rope_dim), dt),
+        shapes = {
+            "c_kv": (L, n_pages, page_size, cfg.kv_lora_rank),
+            "k_rope": (L, n_pages, page_size, cfg.qk_rope_dim),
         }
-    return {
-        "k": _mk(abstract, (L, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dt),
-        "v": _mk(abstract, (L, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dt),
-    }
+    else:
+        shapes = {
+            "k": (L, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+            "v": (L, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+        }
+    if kv_dtype is None:
+        return {k: _mk(abstract, s, dt) for k, s in shapes.items()}
+    cache = {}
+    for k, s in shapes.items():
+        cache[k] = _mk(abstract, s, jnp.int8)
+        cache[k + quant.SCALE_SUFFIX] = _mk(abstract, s[:-1], jnp.float32)
+    return cache
 
 
 # ---------------------------------------------------------------------------

@@ -186,7 +186,8 @@ class ContinuousBatchingEngine:
                  pool: Optional[Any] = None,
                  prefix_index: Optional[Any] = None,
                  bucket_suffix: bool = False,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         if model.is_encdec:
             raise NotImplementedError(
                 "continuous batching needs per-slot decode positions; the "
@@ -212,8 +213,12 @@ class ContinuousBatchingEngine:
             if paged:
                 self.pool = PagedKVCachePool(model, n_slots, max_len,
                                              page_size=page_size,
-                                             n_pages=n_pages, plan=plan)
+                                             n_pages=n_pages, plan=plan,
+                                             kv_dtype=kv_dtype)
             else:
+                if kv_dtype is not None:
+                    raise ValueError(
+                        "kv_dtype quantization needs the paged arena")
                 self.pool = KVCachePool(model, n_slots, max_len, plan=plan)
         self.queue: collections.deque = collections.deque()
         self.active: dict = {}                       # slot -> _Active

@@ -94,7 +94,8 @@ class FaaSRuntime:
                  mesh: Optional[Mesh] = None,
                  locality_max_extra_load: int = 2,
                  gateway_quantum: int = 2,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.mesh = mesh
         self.locality_max_extra_load = locality_max_extra_load
         self.instances = self._make_instances(mesh)
@@ -110,6 +111,9 @@ class FaaSRuntime:
         # gateway's quantum switches to the same TOKEN budget so a chunk
         # and a decode batch cost one comparable unit of schedule
         self.chunk_tokens = chunk_tokens
+        # int8-quantized paged arenas (None = fp): halves resident KV
+        # bytes per token; recurrent-state models keep dense fp pools
+        self.kv_dtype = kv_dtype
         self.keep_alive_s = keep_alive_s
         self.max_warm_engines = max_warm_engines
         self.prewarm = prewarm
@@ -160,7 +164,8 @@ class FaaSRuntime:
             if model.supports_paged_kv:
                 self._pools[key] = PagedKVCachePool(
                     model, self.n_slots, self.max_len,
-                    page_size=self.page_size, plan=inst.plan)
+                    page_size=self.page_size, plan=inst.plan,
+                    kv_dtype=self.kv_dtype)
             else:
                 self._pools[key] = KVCachePool(model, self.n_slots,
                                                self.max_len, plan=inst.plan)
@@ -393,7 +398,8 @@ class FaaSRuntime:
                 pos = jnp.zeros((self.n_slots,), jnp.int32)
                 if paged:
                     cache = model.make_paged_cache(1 + self.n_slots * bps,
-                                                   self.page_size)
+                                                   self.page_size,
+                                                   kv_dtype=self.kv_dtype)
                     if inst.plan is not None:
                         cache = jax.device_put(
                             cache,

@@ -1,5 +1,4 @@
-"""Async invocation gateway: ticket-based request lifecycle over the
-continuous-batching engines.
+"""Async invocation gateway: ticketed lifecycle over the serving engines.
 
 The synchronous front door (``FaaSRuntime.submit_many``) drains one engine
 to completion at a time, so a long decode on one function inflates
@@ -57,8 +56,7 @@ TERMINAL = (DONE, CANCELLED, SHED, FAILED)
 
 
 class DeadlineExceeded(RuntimeError):
-    """The request's queueing deadline expired before admission: it was
-    shed without consuming prefill."""
+    """The queueing deadline expired before admission (shed, no prefill)."""
 
 
 class InvocationCancelled(RuntimeError):
@@ -68,6 +66,7 @@ class InvocationCancelled(RuntimeError):
 @dataclasses.dataclass
 class InvocationRequest:
     """One asynchronous invocation of a deployed function."""
+
     fn_name: str
     prompt: Any                          # int32 token ids, any array-like
     event: Optional[dict] = None
@@ -85,6 +84,7 @@ class InvocationRequest:
 @dataclasses.dataclass
 class SubmitResult:
     """Terminal record of one invocation (also the compat-shim return)."""
+
     req_id: int
     fn_name: str
     kind: str                        # 'warm' | 'fork' | 'cold'
@@ -125,26 +125,33 @@ class InvocationHandle:
     # -- lifecycle ------------------------------------------------------
     @property
     def status(self) -> str:
+        """Current lifecycle state (one of the module's state constants)."""
         return self._state
 
     @property
     def done(self) -> bool:
+        """True once the invocation reached a terminal state."""
         return self._state in TERMINAL
 
     def cancel(self) -> bool:
-        """Retire the invocation now: a queued request is dropped before
-        any prefill; an in-flight one releases its slot and KV pages
-        (refcount-safely, including borrowed prefix pages).  Returns False
-        when the request already reached a terminal state."""
+        """Retire the invocation now.
+
+        A queued request is dropped before any prefill; an in-flight one
+        releases its slot and KV pages (refcount-safely, including
+        borrowed prefix pages).  Returns False when the request already
+        reached a terminal state.
+        """
         return self._gateway.cancel(self)
 
     # -- consumption ----------------------------------------------------
     def tokens(self):
-        """Per-token iterator bridging the engine's step loop: yields each
-        token as soon as it is sampled, pumping the gateway whenever no
-        token is buffered yet.  Ends at completion or cancellation (the
-        tokens emitted so far are all yielded); raises
-        :class:`DeadlineExceeded` if the request was shed."""
+        """Stream tokens as the engine emits them (a per-token iterator).
+
+        Yields each token as soon as it is sampled, pumping the gateway
+        whenever no token is buffered yet.  Ends at completion or
+        cancellation (the tokens emitted so far are all yielded); raises
+        :class:`DeadlineExceeded` if the request was shed.
+        """
         i = 0
         while True:
             while i < len(self._tokens):
@@ -162,11 +169,14 @@ class InvocationHandle:
                                until=lambda: len(self._tokens) > i)
 
     def result(self, timeout: Optional[float] = None) -> SubmitResult:
-        """Pump the gateway until this invocation terminates and return
-        its :class:`SubmitResult` (status ``'cancelled'`` keeps the tokens
-        streamed before the cancel).  Raises :class:`DeadlineExceeded` for
-        shed requests, :class:`PoolExhausted` for unservable ones and
-        :class:`TimeoutError` when ``timeout`` elapses first."""
+        """Pump the gateway until this invocation terminates.
+
+        Returns its :class:`SubmitResult` (status ``'cancelled'`` keeps
+        the tokens streamed before the cancel).  Raises
+        :class:`DeadlineExceeded` for shed requests,
+        :class:`PoolExhausted` for unservable ones and
+        :class:`TimeoutError` when ``timeout`` elapses first.
+        """
         if not self._gateway.pump(wait_for=self, timeout=timeout):
             raise TimeoutError(
                 f"invocation {self.req_id} ({self.request.fn_name}) still "
@@ -238,10 +248,12 @@ class InvocationGateway:
 
     # -- intake ---------------------------------------------------------
     def submit(self, request: InvocationRequest) -> InvocationHandle:
-        """Validate, resolve the serving engine (forking if no warm one
-        exists — the fork's weight stream overlaps later scheduling) and
-        enqueue.  Returns the ticket immediately; no decode work happens
-        until the gateway is pumped."""
+        """Validate, resolve the serving engine and enqueue the request.
+
+        A missing warm engine forks one (the fork's weight stream
+        overlaps later scheduling).  Returns the ticket immediately; no
+        decode work happens until the gateway is pumped.
+        """
         now = (time.perf_counter() if request.arrival_s is None
                else request.arrival_s)
         rt = self.runtime
@@ -274,6 +286,7 @@ class InvocationGateway:
         return handle
 
     def cancel(self, handle: InvocationHandle) -> bool:
+        """Cancel the handle's request; False if already terminal."""
         if handle.done:
             return False
         if handle.engine.cancel(handle.req_id):
@@ -284,11 +297,13 @@ class InvocationGateway:
     # -- scheduling -----------------------------------------------------
     def pump(self, wait_for: Optional[InvocationHandle] = None,
              timeout: Optional[float] = None, until=None) -> bool:
-        """Run scheduling rounds until ``wait_for`` reaches a terminal
-        state (or, with None, until every live invocation drains).
+        """Run scheduling rounds until ``wait_for`` reaches a terminal state.
+
+        With ``wait_for=None``, pumps until every live invocation drains.
         ``until`` is an extra early-exit predicate — the streaming
         iterator passes "one more token buffered".  Returns False only
-        when ``timeout`` elapsed first."""
+        when ``timeout`` elapsed first.
+        """
         t_end = None if timeout is None else time.perf_counter() + timeout
         while True:
             if wait_for is not None and wait_for.done:
@@ -307,13 +322,15 @@ class InvocationGateway:
         self.pump()
 
     def replay(self, schedule) -> list:
-        """Open-loop replay: ``schedule`` is ``[(offset_s, request)]``.
+        """Open-loop replay of a ``[(offset_s, request)]`` schedule.
+
         Each request is ticketed once its offset (from replay start)
         elapses — pumping in-flight work while waiting, never blocking
         arrivals on it — with the arrival backdated to the INTENDED
         offset, so TTFT and deadlines measure open-loop lateness even
         when the engines fall behind.  Returns the handles in schedule
-        order after a full drain."""
+        order after a full drain.
+        """
         t0 = time.perf_counter()
         handles, i = [], 0
         schedule = sorted(schedule, key=lambda s: s[0])
@@ -341,8 +358,10 @@ class InvocationGateway:
         return out
 
     def _pool_owner(self, pool, engines: list):
-        """The engine holding active slots in ``pool`` (exclusive-arena
-        rule: only it may decode there)."""
+        """Find the engine holding active slots in ``pool``.
+
+        Exclusive-arena rule: only that engine may decode there.
+        """
         cands = {id(e): e for e in engines}
         for w in self.runtime._engines.values():
             cands.setdefault(id(w.engine), w.engine)
@@ -352,8 +371,11 @@ class InvocationGateway:
         return None
 
     def _round(self) -> None:
-        """One rotation: every eligible engine gets one quantum (or, in
-        drain mode, the first runnable engine runs to completion)."""
+        """Run one rotation: every eligible engine gets one quantum.
+
+        In drain mode the first runnable engine runs to completion
+        instead.
+        """
         engines = self._engines()
         if not engines:
             return

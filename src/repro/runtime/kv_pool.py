@@ -42,6 +42,17 @@ device copy of the trailing partial page when ``r`` ends mid-page, so the
 slot can keep appending without ever mutating the donor's page.  Shared
 pages return to the free list only when their refcount reaches 0
 (``release`` decrements uniformly: exclusively-owned pages sit at 1).
+
+Quantized mode (``kv_dtype='int8'``): the arena's value leaves are int8
+with a per-row float32 scale arena (``<leaf>_scale``) in the same cache
+pytree, page-indexed exactly like its value leaf.  The pool quantizes on
+write (``write_prompt`` / ``write_suffix`` / ``bake_prefix`` — decode-step
+appends quantize inside the model layer) and dequantizes on read
+(``read_slot`` / ``read_slot_full`` hand back fp dense caches, so suffix
+prefill and parity readers are layout-blind).  Because scale leaves live
+in ``self.cache``, copy-on-write page copies, refcounts, byte accounting
+and sharding specs cover them with no extra bookkeeping: scales are
+refcounted WITH their pages by construction.
 """
 
 from __future__ import annotations
@@ -54,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import ShardingPlan
+from repro.models import quant
 from repro.models.registry import Model
 
 
@@ -72,6 +84,7 @@ class PrefixHandle:
     drops the pin.  ``tokens`` keeps the prefix token ids for exact-match
     verification (the index's page hashes only nominate candidates).
     """
+
     pool: "PagedKVCachePool"
     pages: tuple
     n_tokens: int
@@ -80,10 +93,12 @@ class PrefixHandle:
 
     @property
     def page_size(self) -> int:
+        """Tokens per page of the owning pool."""
         return self.pool.page_size
 
     @property
     def n_full_pages(self) -> int:
+        """Pages the prefix fills completely (aliasable without a copy)."""
         return self.n_tokens // self.page_size
 
 
@@ -93,7 +108,8 @@ class KVCachePool:
     With a ``plan`` the pool's arena is allocated directly as
     NamedSharding-placed buffers on the plan's mesh (heads / feature dims
     over 'model'), so every engine decode runs tensor-parallel without a
-    placement copy."""
+    placement copy.
+    """
 
     def __init__(self, model: Model, n_slots: int, max_len: int,
                  plan: Optional[ShardingPlan] = None):
@@ -113,9 +129,11 @@ class KVCachePool:
     # ---- slot bookkeeping -------------------------------------------------
     @property
     def n_free(self) -> int:
+        """Slots currently unallocated."""
         return len(self._free)
 
     def alloc(self) -> int:
+        """Claim a free slot; raises :class:`PoolExhausted` when none."""
         if not self._free:
             raise PoolExhausted("KVCachePool exhausted: no free slots")
         slot = self._free.pop()
@@ -123,6 +141,7 @@ class KVCachePool:
         return slot
 
     def release(self, slot: int) -> None:
+        """Return ``slot`` to the free list (double-release raises)."""
         if slot in self._free_set or not (0 <= slot < self.n_slots):
             raise ValueError(f"bad slot release: {slot}")
         self._free.append(slot)
@@ -139,6 +158,7 @@ class KVCachePool:
         return self.model.gather_cache_slots(self.cache, [slot])
 
     def nbytes(self) -> int:
+        """Total bytes of the pool's cache arena."""
         return sum(int(l.nbytes) for l in jax.tree.leaves(self.cache))
 
 
@@ -150,13 +170,30 @@ class PagedKVCachePool:
     so their cache writes scribble on a page no request owns and their
     reads are masked out by the per-slot length.  Allocatable pages are
     ``1 .. n_pages-1``.
+
+    Refcount invariants (prefix sharing):
+
+      * a freshly mapped page has refcount 1, held by its slot;
+      * ``bake_prefix`` pages hold refcount 1 via their handle, surviving
+        every serve/evict cycle until ``release_prefix``;
+      * ``alloc(shared_prefix=...)`` increments the refcount of every
+        aliased full page; writes to any page with refcount > 1 raise
+        (copy-on-write: the trailing partial page is copied, never shared
+        mutably);
+      * ``release`` decrements uniformly; a page returns to the free list
+        only at refcount 0.
+
+    With ``kv_dtype='int8'`` the arena is quantized: int8 value leaves and
+    per-row float32 ``<leaf>_scale`` leaves share the cache pytree and the
+    page axis, so every page-granular operation above covers scales too.
     """
 
     NULL_PAGE = 0
 
     def __init__(self, model: Model, n_slots: int, max_len: int,
                  page_size: int = 8, n_pages: int | None = None,
-                 plan: Optional[ShardingPlan] = None):
+                 plan: Optional[ShardingPlan] = None,
+                 kv_dtype: Optional[str] = None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if page_size < 1:
@@ -169,6 +206,7 @@ class PagedKVCachePool:
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
+        self.kv_dtype = kv_dtype
         self.blocks_per_slot = -(-max_len // page_size)
         # logical span of a full slot (page-multiple; == max_len when the
         # page size divides it, which is also the bit-parity condition
@@ -182,7 +220,12 @@ class PagedKVCachePool:
             raise ValueError("n_pages must be >= 2 (null page + 1)")
         self.n_pages = n_pages
         self.plan = plan
-        self.cache = model.make_paged_cache(n_pages, page_size)
+        self.cache = model.make_paged_cache(n_pages, page_size,
+                                            kv_dtype=kv_dtype)
+        # the fp dtype prefill produces and read_slot* hands back (the
+        # quantized arena dequantizes reads to this)
+        self._fp_dtype = jax.tree.leaves(
+            model.make_cache(1, page_size, abstract=True))[0].dtype
         if plan is not None:
             # page + in-page axes replicated (any device serves any page),
             # heads / latent dims over 'model'
@@ -211,14 +254,17 @@ class PagedKVCachePool:
 
     # ---- accounting -------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to back ``n_tokens`` positions (minimum 1)."""
         return max(1, -(-n_tokens // self.page_size))
 
     @property
     def n_free_slots(self) -> int:
+        """Slots currently unallocated."""
         return len(self._free_slots)
 
     @property
     def n_free_pages(self) -> int:
+        """Pages on the free list (some may be promised to reservations)."""
         return len(self._free_pages)
 
     @property
@@ -227,9 +273,12 @@ class PagedKVCachePool:
         return len(self._free_pages) - self._reserved
 
     def can_admit(self, n_tokens_total: int, reuse_len: int = 0) -> bool:
-        """Admissible now?  ``reuse_len`` tokens covered by a shared prefix
-        need no fresh pages for their full pages (the COW partial page, if
-        any, is already counted in ``blocks_for(total) - reuse//page``)."""
+        """True when a request of this total length is admissible now.
+
+        ``reuse_len`` tokens covered by a shared prefix need no fresh
+        pages for their full pages (the COW partial page, if any, is
+        already counted in ``blocks_for(total) - reuse // page_size``).
+        """
         fresh = self.blocks_for(n_tokens_total) - reuse_len // self.page_size
         return bool(self._free_slots) and fresh <= self.n_available_pages
 
@@ -245,7 +294,9 @@ class PagedKVCachePool:
         pages alias into the slot's page table (refcount++, no copy); a
         trailing partial page — ``reuse_len`` ending mid-page — is copied
         once into a fresh page the slot owns exclusively, so later writes
-        never touch the donor (copy-on-write).
+        never touch the donor (copy-on-write).  In quantized mode the
+        copy spans value AND scale leaves (same page axis), so a
+        borrower's re-quantized appends can never perturb donor scales.
 
         ``budget_tokens`` caps the INITIAL reservation at the pages
         covering that many tokens instead of the worst case (chunked
@@ -306,6 +357,7 @@ class PagedKVCachePool:
         if partial:
             # one page copy for the trailing partial page: the slot keeps
             # appending tokens into ITS copy, the donor page never mutates
+            # (value and scale leaves alike — same page axis)
             page = self._claim_free_page()
             donor = int(shared_prefix.pages[n_full])
             self.cache = jax.tree.map(
@@ -322,12 +374,16 @@ class PagedKVCachePool:
         return slot
 
     def extend_budget(self, slot: int, n_tokens: int) -> bool:
-        """Grow ``slot``'s reserved block budget to cover ``n_tokens``
-        total tokens (chunked prefill: called before each chunk, and with
-        the full ``prompt + max_new`` before the final one so decode keeps
-        the reservation invariant).  Returns False — no state change —
-        when the free pool cannot back the extra reservation right now;
-        the caller retries after retirements free pages."""
+        """Grow ``slot``'s reserved block budget to cover ``n_tokens``.
+
+        Chunked prefill calls this before each chunk, and with the full
+        ``prompt + max_new`` before the final one so decode keeps the
+        reservation invariant.  Returns False — no state change — when
+        the free pool cannot back the extra reservation right now; the
+        caller retries after retirements free pages.  (The reservation is
+        page-count bookkeeping only: the pages — and, in quantized mode,
+        their scale rows — materialize at :meth:`ensure_len` time.)
+        """
         if slot not in self._budget:
             raise ValueError(f"slot {slot} is not allocated")
         need = self.blocks_for(n_tokens)
@@ -382,6 +438,12 @@ class PagedKVCachePool:
             raise AssertionError(f"page {page} refcount went negative")
 
     def release(self, slot: int) -> None:
+        """Retire ``slot``: unref its mapped pages and free the slot.
+
+        Aliased prefix pages merely drop one reference; pages return to
+        the free list only at refcount 0, so a donor prefix (or another
+        borrower) is never freed out from under its remaining users.
+        """
         if slot in self._free_slot_set or not (0 <= slot < self.n_slots):
             raise ValueError(f"bad slot release: {slot}")
         mapped = self._mapped.pop(slot)
@@ -403,6 +465,8 @@ class PagedKVCachePool:
         ``len(tokens)``).  Pages come straight from the free list — no
         slot involved — with refcount 1 held by the returned handle, so
         they survive every serve/evict cycle until ``release_prefix``.
+        In quantized mode the baked pages are quantized once here and
+        served int8 to every borrower.
         """
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         n_tokens = len(tokens)
@@ -420,8 +484,11 @@ class PagedKVCachePool:
                             n_tokens=n_tokens, tokens=tokens)
 
     def release_prefix(self, handle: PrefixHandle) -> None:
-        """Drop the handle's pin; pages free as their refcount hits 0
-        (live slots still aliasing them keep them alive)."""
+        """Drop the handle's pin.
+
+        Pages free as their refcount hits 0; live slots still aliasing
+        them keep them alive.
+        """
         if not handle.pinned or handle.pool is not self:
             raise ValueError("handle is not pinned on this pool")
         handle.pinned = False
@@ -434,33 +501,57 @@ class PagedKVCachePool:
 
     # ---- cache movement ---------------------------------------------------
     def _write_blocks(self, pages, sub_cache: Any, first_block: int) -> None:
-        """Scatter logical blocks ``first_block ..`` of a batch-1 dense
-        cache into the given physical ``pages`` (one per block)."""
+        """Scatter logical blocks of a batch-1 dense fp cache into pages.
+
+        Blocks ``first_block ..`` land in the given physical ``pages``
+        (one per block).  In quantized mode each block's rows are
+        quantized here — int8 values into the value leaf, per-row scales
+        into its ``_scale`` leaf — so callers always hand over plain fp
+        caches.
+        """
         ps = self.page_size
         nb = len(pages)
 
-        def copy(arena, sub):
+        def span(sub):
             L, _, T = sub.shape[:3]
             blocks = sub[:, 0].reshape((L, T // ps, ps) + sub.shape[3:])
-            span = blocks[:, first_block:first_block + nb]
-            return arena.at[:, pages].set(span.astype(arena.dtype))
+            return blocks[:, first_block:first_block + nb]
 
-        self.cache = jax.tree.map(copy, self.cache, sub_cache)
+        if self.kv_dtype is None:
+            self.cache = jax.tree.map(
+                lambda arena, sub: arena.at[:, pages].set(
+                    span(sub).astype(arena.dtype)),
+                self.cache, sub_cache)
+            return
+        new = dict(self.cache)
+        for key, sub in sub_cache.items():
+            q, s = quant.quantize_rows(span(sub))
+            new[key] = self.cache[key].at[:, pages].set(q)
+            skey = key + quant.SCALE_SUFFIX
+            new[skey] = self.cache[skey].at[:, pages].set(s)
+        self.cache = new
 
     def write_prompt(self, slot: int, sub_cache: Any, n_tokens: int) -> None:
-        """Copy a batch-1 prefilled dense cache's first ``n_tokens``
-        positions into ``slot``'s pages (allocating them).  ``sub_cache``
-        leaves are ``[L, 1, T, ...]`` with ``T`` a page multiple covering
-        ``n_tokens`` — only the occupied pages are written."""
+        """Write a prefilled prompt into ``slot``'s pages (allocating them).
+
+        ``sub_cache`` is a batch-1 dense fp cache whose leaves are
+        ``[L, 1, T, ...]`` with ``T`` a page multiple covering
+        ``n_tokens`` — only the occupied pages are written (and quantized,
+        in int8 mode).
+        """
         self.write_suffix(slot, sub_cache, 0, n_tokens)
 
     def write_suffix(self, slot: int, sub_cache: Any, start_token: int,
                      n_tokens: int) -> None:
-        """Copy positions ``start_token .. n_tokens-1`` of a batch-1 dense
-        cache into ``slot``'s pages (mapping any still missing).  Writes
-        whole blocks from ``start_token // page_size`` on — the block
-        containing ``start_token`` is the slot's COW copy when a shared
-        prefix ends mid-page, never an aliased donor page."""
+        """Write positions ``start_token .. n_tokens-1`` into ``slot``.
+
+        Maps any still-missing pages, then writes whole blocks from
+        ``start_token // page_size`` on — the block containing
+        ``start_token`` is the slot's COW copy when a shared prefix ends
+        mid-page, never an aliased donor page (shared-page writes raise).
+        Quantized mode re-quantizes the rewritten first block from its
+        dequantized values, which is bit-exact (see ``repro.models.quant``).
+        """
         self.ensure_len(slot, n_tokens)
         first = start_token // self.page_size
         nb = self.blocks_for(n_tokens)
@@ -474,43 +565,54 @@ class PagedKVCachePool:
                 "(aliased prefix pages are copy-on-write)")
         self._write_blocks(pages, sub_cache, first_block=first)
 
-    def read_slot(self, slot: int, n_tokens: int) -> Any:
-        """Gather ``slot``'s first ``n_tokens`` positions back out as a
-        batch-1 dense cache (page-multiple length)."""
-        nb = self.blocks_for(n_tokens)
-        pages = self.page_table[slot, :nb]
-
+    def _gather_pages(self, pages, length: int) -> Any:
+        """Gather ``pages`` into a batch-1 dense fp cache of ``length``."""
         def gather(arena):
             blocks = arena[:, pages]                   # [L, nb, ps, ...]
             L = blocks.shape[0]
-            return blocks.reshape(
-                (L, 1, nb * self.page_size) + blocks.shape[3:])
+            return blocks.reshape((L, 1, length) + blocks.shape[3:])
 
-        return jax.tree.map(gather, self.cache)
+        if self.kv_dtype is None:
+            return jax.tree.map(gather, self.cache)
+        return {
+            key: quant.dequantize_rows(
+                gather(self.cache[key]),
+                gather(self.cache[key + quant.SCALE_SUFFIX]),
+                self._fp_dtype)
+            for key in quant.value_keys(self.cache)
+        }
+
+    def read_slot(self, slot: int, n_tokens: int) -> Any:
+        """Gather ``slot``'s first ``n_tokens`` positions as a dense cache.
+
+        Returns a batch-1 fp cache of page-multiple length (dequantized
+        from the int8 arena in quantized mode).
+        """
+        nb = self.blocks_for(n_tokens)
+        pages = self.page_table[slot, :nb]
+        return self._gather_pages(pages, nb * self.page_size)
 
     def read_slot_full(self, slot: int) -> Any:
-        """Gather the slot's WHOLE page-table row as a batch-1 dense cache
-        of ``padded_len`` positions — the suffix-prefill working cache:
-        mapped prefix blocks carry their KV, unmapped blocks read the null
-        page (masked out by position before any unwritten slot is
-        attended)."""
-        pages = self.page_table[slot]
+        """Gather the slot's WHOLE page-table row as a dense fp cache.
 
-        def gather(arena):
-            blocks = arena[:, pages]                   # [L, bps, ps, ...]
-            L = blocks.shape[0]
-            return blocks.reshape((L, 1, self.padded_len) + blocks.shape[3:])
-
-        return jax.tree.map(gather, self.cache)
+        The result spans ``padded_len`` positions — the suffix-prefill
+        working cache: mapped prefix blocks carry their KV, unmapped
+        blocks read the null page (masked out by position before any
+        unwritten slot is attended).
+        """
+        return self._gather_pages(self.page_table[slot], self.padded_len)
 
     # ---- device page table (dirty-row sync) -------------------------------
     def _touch(self, slot: int) -> None:
         self._dirty_rows.add(slot)
 
     def device_page_table(self):
-        """The page table as a device-resident array, re-uploading only
-        rows that changed since the last call (admit/grow/retire touch a
-        few rows; steady-state decode uploads nothing)."""
+        """Return the page table as a device-resident array.
+
+        Only rows that changed since the last call re-upload
+        (admit/grow/retire touch a few rows; steady-state decode uploads
+        nothing).
+        """
         if self._device_pt is None:
             if self.plan is not None:
                 pt = jax.device_put(self.page_table, self.plan.replicated)
@@ -529,16 +631,21 @@ class PagedKVCachePool:
     # ---- footprint --------------------------------------------------------
     @property
     def n_used_pages(self) -> int:
-        """Pages currently holding KV (mapped by slots or pinned by
-        prefixes) — the arena's RESIDENT footprint, as opposed to its
-        allocated capacity."""
+        """Pages currently holding KV (mapped by slots or pinned by prefixes).
+
+        The arena's RESIDENT footprint, as opposed to its allocated
+        capacity.
+        """
         return (self.n_pages - 1) - len(self._free_pages)
 
     def page_nbytes(self) -> int:
+        """Bytes per page (scale rows included in quantized mode)."""
         return self.nbytes() // self.n_pages
 
     def resident_nbytes(self) -> int:
+        """Bytes of the pages currently holding KV."""
         return self.n_used_pages * self.page_nbytes()
 
     def nbytes(self) -> int:
+        """Total bytes of the arena (value + scale leaves)."""
         return sum(int(l.nbytes) for l in jax.tree.leaves(self.cache))

@@ -180,6 +180,57 @@ def test_paged_decode_any_length(length):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
 
 
+@pytest.mark.parametrize("B,H,KV,ps,NB,d", [
+    (2, 8, 2, 64, 8, 64),       # GQA 4:1
+    (3, 8, 1, 16, 6, 64),       # MQA, small pages
+])
+def test_paged_decode_dequant_sweep(B, H, KV, ps, NB, d):
+    """The in-kernel dequantizing variant must match the dequant oracle."""
+    from repro.models.quant import quantize_rows
+
+    n_pages = B * NB + 1
+    kp, vp, pt = _page_arena(RNG, B, KV, d, ps, NB, n_pages)
+    kq, ks = quantize_rows(kp)
+    vq, vs = quantize_rows(vp)
+    q = jax.random.normal(jax.random.fold_in(RNG, 29), (B, H, d))
+    lengths = jnp.asarray([(NB * ps) // (i + 1) for i in range(B)], jnp.int32)
+    out = ops.paged_decode_attention(q, kq, vq, pt, lengths,
+                                     k_scales=ks, v_scales=vs)
+    want = ref.paged_decode_attention_ref(q, kq, vq, pt, lengths,
+                                          k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_paged_decode_dequant_close_to_fp():
+    """int8 round-tripped attention stays close to the fp arena's output.
+
+    Per-row absmax scales bound the element error at ~scale/2, so the
+    attention output over a normal(0,1) arena lands within ~1e-2.
+    """
+    from repro.models.quant import quantize_rows
+
+    B, H, KV, ps, NB, d = 2, 8, 2, 32, 4, 64
+    kp, vp, pt = _page_arena(jax.random.fold_in(RNG, 31), B, KV, d, ps, NB,
+                             B * NB + 1)
+    kq, ks = quantize_rows(kp)
+    vq, vs = quantize_rows(vp)
+    q = jax.random.normal(jax.random.fold_in(RNG, 37), (B, H, d))
+    lengths = jnp.asarray([NB * ps, ps + 3], jnp.int32)
+    fp = ops.paged_decode_attention(q, kp, vp, pt, lengths)
+    quant = ops.paged_decode_attention(q, kq, vq, pt, lengths,
+                                       k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(quant), np.asarray(fp), atol=3e-2)
+
+
+def test_paged_decode_scales_require_pair():
+    kp, vp, pt = _page_arena(RNG, 1, 2, 64, 16, 2, 3)
+    from repro.models.quant import quantize_rows
+    kq, ks = quantize_rows(kp)
+    q = jax.random.normal(RNG, (1, 4, 64))
+    with pytest.raises(ValueError, match="both k_scales and v_scales"):
+        ops.paged_decode_attention(q, kq, vp, pt, 8, k_scales=ks)
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------

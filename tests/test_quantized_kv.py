@@ -1,0 +1,241 @@
+"""Quantized (int8) paged-KV arena: edge cases the byte savings must not
+buy at the cost of correctness.
+
+Covered invariants:
+  * the arena layout carries one float32 scale row per quantized row, and
+    ``nbytes`` / sharding / page copies account for scales with the pages;
+  * copy-on-write prefix sharing never mutates a donor page's values OR
+    scales — full pages alias bit-stable, the trailing partial page is
+    device-copied (values + scales) before the borrower appends;
+  * re-quantizing a dequantized block (chunked prefill's first-block
+    rewrite, suffix writes over the COW copy) is bit-exact;
+  * ``extend_budget`` + ``ensure_len`` materialize scale rows together
+    with their pages under chunked admission;
+  * per-family (dense / moe / MLA) greedy decode through the int8 arena
+    stays bounded-close to the fp arena: first token exact (prefill is
+    fp), full completions within a divergence budget.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import quant
+from repro.models.registry import get_smoke_model
+from repro.runtime.continuous import ContinuousBatchingEngine
+from repro.runtime.kv_pool import PagedKVCachePool
+
+DENSE, MOE, MLA = "llama3-8b", "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b"
+
+
+def _model(arch="llama3-8b", **kw):
+    return get_smoke_model(arch, n_layers=2, **kw)
+
+
+def _prefill(m, n_tokens, pad_to, seed=0):
+    """A batch-1 prefilled dense fp cache covering ``n_tokens``."""
+    params = m.init_params(jax.random.key(seed))
+    toks = jnp.asarray(
+        np.random.default_rng(seed).integers(1, m.cfg.vocab_size,
+                                             n_tokens))[None, :]
+    cache = m.make_cache(1, pad_to)
+    _, cache = m.prefill(params, {"tokens": toks.astype(jnp.int32)}, cache)
+    return params, np.asarray(toks[0]), cache
+
+
+# ---------------------------------------------------------------------------
+# quant transform
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_idempotent():
+    """quantize(dequantize(q, s)) == (q, s) bit for bit — the property COW
+    copies and chunked-prefill rewrites rely on."""
+    x = jax.random.normal(jax.random.key(0), (64, 32))
+    q1, s1 = quant.quantize_rows(x)
+    x1 = quant.dequantize_rows(q1, s1, jnp.float32)
+    q2, s2 = quant.quantize_rows(x1)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_quantize_zero_rows_representable():
+    q, s = quant.quantize_rows(jnp.zeros((4, 16)))
+    assert np.all(np.asarray(q) == 0) and np.all(np.asarray(s) > 0)
+    back = quant.dequantize_rows(q, s, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), np.zeros((4, 16)))
+
+
+# ---------------------------------------------------------------------------
+# arena layout
+# ---------------------------------------------------------------------------
+
+def test_quantized_arena_layout_and_bytes():
+    m = _model()
+    fp = PagedKVCachePool(m, n_slots=2, max_len=32, page_size=8)
+    q = PagedKVCachePool(m, n_slots=2, max_len=32, page_size=8,
+                         kv_dtype="int8")
+    assert set(q.cache) == {"k", "k_scale", "v", "v_scale"}
+    assert q.cache["k"].dtype == jnp.int8
+    assert q.cache["k_scale"].dtype == jnp.float32
+    # scale leaf = value leaf minus its last (feature) axis
+    assert q.cache["k_scale"].shape == q.cache["k"].shape[:-1]
+    # scales are billed with the pages, and the arena still shrinks
+    assert q.nbytes() < fp.nbytes()
+    assert fp.nbytes() / q.nbytes() >= 1.8
+
+
+def test_quantized_mla_arena_layout():
+    m = _model(MLA)
+    q = PagedKVCachePool(m, n_slots=2, max_len=32, page_size=8,
+                         kv_dtype="int8")
+    assert set(q.cache) == {"c_kv", "c_kv_scale", "k_rope", "k_rope_scale"}
+    assert q.cache["c_kv_scale"].shape == q.cache["c_kv"].shape[:-1]
+
+
+def test_dense_pool_rejects_kv_dtype():
+    m = _model()
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingEngine(m, m.init_params(jax.random.key(0)),
+                                 n_slots=2, max_len=16, paged=False,
+                                 kv_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write: donor scales are immutable
+# ---------------------------------------------------------------------------
+
+def _snapshot(pool, pages):
+    return {k: np.asarray(v[:, list(pages)]) for k, v in pool.cache.items()}
+
+
+def test_cow_borrower_never_mutates_donor_scales():
+    """A borrower appending over a mid-page prefix must leave every donor
+    page — int8 values AND float32 scales — bit-identical."""
+    m = _model()
+    pool = PagedKVCachePool(m, n_slots=2, max_len=48, page_size=8,
+                            kv_dtype="int8")
+    # one 16-token prefill feeds BOTH the baked prefix (first 13 tokens —
+    # a full page + 5-row tail) and the borrower's suffix rewrite, so the
+    # rewritten rows quantize from bit-identical fp sources
+    params, toks, cache = _prefill(m, 16, 16)
+    handle = pool.bake_prefix(cache, toks[:13])
+    donor = _snapshot(pool, handle.pages)
+
+    slot = pool.alloc(16, 8, shared_prefix=handle, reuse_len=13)
+    # the full page aliases (ref 2), the partial page was copied (ref 1)
+    assert pool.prefix_page_refs(handle) == [2, 1]
+    # borrower's COW copy is a fresh page carrying the donor tail's bits
+    cow_page = pool.page_table[slot, 1]
+    assert cow_page not in handle.pages
+    for k in pool.cache:
+        np.testing.assert_array_equal(
+            np.asarray(pool.cache[k][:, cow_page]),
+            donor[k][:, 1], err_msg=f"COW copy of {k} diverged")
+
+    # suffix-prefill the remaining prompt over the COW block
+    pool.write_suffix(slot, cache, 8, 16)
+    after = _snapshot(pool, handle.pages)
+    for k in pool.cache:
+        np.testing.assert_array_equal(
+            after[k], donor[k], err_msg=f"donor {k} pages mutated")
+    # and the rewritten COW block re-quantized bit-identically (same fp
+    # source rows -> same int8 bits and scales)
+    for k in pool.cache:
+        np.testing.assert_array_equal(
+            np.asarray(pool.cache[k][:, cow_page]),
+            donor[k][:, 1],
+            err_msg=f"requantized COW rows of {k} drifted")
+    pool.release(slot)
+    assert pool.prefix_page_refs(handle) == [1, 1]
+
+
+def test_write_suffix_refuses_aliased_pages_quantized():
+    m = _model()
+    pool = PagedKVCachePool(m, n_slots=2, max_len=48, page_size=8,
+                            kv_dtype="int8")
+    params, toks, cache = _prefill(m, 16, 16)       # page-aligned prefix
+    handle = pool.bake_prefix(cache, toks)
+    slot = pool.alloc(24, 8, shared_prefix=handle, reuse_len=16)
+    _, _, full = _prefill(m, 24, 48)
+    with pytest.raises(ValueError, match="copy-on-write"):
+        pool.write_suffix(slot, full, 0, 24)        # block 0 is aliased
+    pool.write_suffix(slot, full, 16, 24)           # fresh blocks: fine
+
+
+# ---------------------------------------------------------------------------
+# requantization roundtrip through pool reads
+# ---------------------------------------------------------------------------
+
+def test_read_write_requant_roundtrip_exact():
+    """write -> read (dequant) -> write (requant) -> read is a fixed point:
+    chunked prefill can rewrite the first block of every chunk forever
+    without drift."""
+    m = _model()
+    pool = PagedKVCachePool(m, n_slots=1, max_len=32, page_size=8,
+                            kv_dtype="int8")
+    _, _, cache = _prefill(m, 21, 24)
+    slot = pool.alloc(21, 8)
+    pool.write_prompt(slot, cache, 21)
+    r1 = pool.read_slot(slot, 21)
+    pool.write_suffix(slot, r1, 16, 21)             # rewrite the tail block
+    r2 = pool.read_slot(slot, 21)
+    for k in r1:
+        np.testing.assert_array_equal(np.asarray(r1[k]), np.asarray(r2[k]))
+
+
+# ---------------------------------------------------------------------------
+# chunked admission materializes scale rows with pages
+# ---------------------------------------------------------------------------
+
+def test_extend_budget_allocates_scale_rows_with_pages():
+    m = _model()
+    pool = PagedKVCachePool(m, n_slots=1, max_len=64, page_size=8,
+                            kv_dtype="int8", n_pages=9)
+    slot = pool.alloc(40, 8, budget_tokens=16)      # chunked: 2 pages now
+    assert pool.slot_budget(slot) == 2
+    _, _, cache = _prefill(m, 48, 48)
+    pool.write_suffix(slot, cache, 0, 16)
+    assert pool._mapped[slot] == 2
+    assert pool.extend_budget(slot, 48)             # full prompt + decode
+    pool.write_suffix(slot, cache, 16, 48)
+    assert pool._mapped[slot] == 6
+    pages = pool.page_table[slot, :6]
+    # every mapped page's scale rows were materialized by the same writes
+    # (absmax floor: a written row's scale is strictly positive)
+    ks = np.asarray(pool.cache["k_scale"][:, pages])
+    assert np.all(ks > 0)
+    # the dequantized readback matches the fp source within int8 precision
+    got = np.asarray(pool.read_slot(slot, 48)["k"][:, :, :48], np.float32)
+    want = np.asarray(cache["k"][:, :, :48], np.float32)
+    denom = max(1e-6, float(np.abs(want).max()))
+    assert np.abs(got - want).max() / denom < 2e-2
+
+
+# ---------------------------------------------------------------------------
+# per-family bounded-divergence parity vs the fp arena
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [DENSE, MOE, MLA])
+def test_quantized_engine_family_parity(arch):
+    """Greedy serving through the int8 arena: first token exact per
+    request (prefill is fp in both arenas), completions within a bounded
+    divergence of the fp-arena engine."""
+    m = _model(arch)
+    params = m.init_params(jax.random.key(0))
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(1, m.cfg.vocab_size, s).astype(np.int32), n)
+            for s, n in [(6, 4), (18, 6), (11, 5)]]
+
+    def run(kv_dtype):
+        eng = ContinuousBatchingEngine(m, params, n_slots=3, max_len=32,
+                                       page_size=8, kv_dtype=kv_dtype)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        res = eng.run()
+        return [np.asarray(res[r].tokens) for r in rids]
+
+    fp, q = run(None), run("int8")
+    assert all(a[0] == b[0] for a, b in zip(fp, q)), "first token diverged"
+    total = sum(len(a) for a in fp)
+    diff = sum(int(np.sum(a != b)) for a, b in zip(fp, q))
+    assert diff / total <= 0.34, f"divergence {diff}/{total} over budget"

@@ -351,6 +351,102 @@ def test_sharded_pallas_flash_attention_kernel(monkeypatch):
         atol=2e-5)
 
 
+def test_sharded_pallas_dense_decode_no_fallback(monkeypatch):
+    """A DENSE pool (paged=False) under TP runs the flash-decoding kernel
+    shard_map'd over 'model' — the XLA reference must never be hit — and
+    stays token-identical to the single-device XLA engine (the carry-over
+    closed by this PR: dense pools no longer fall back under a plan)."""
+    from repro.kernels import ref
+
+    kw = dict(n_layers=2, n_heads=8, n_kv_heads=8, head_dim=16)
+    mp = get_smoke_model("qwen3-14b", attn_impl="pallas", **kw)
+    mx = get_smoke_model("qwen3-14b", attn_impl="xla", **kw)
+    params = mx.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(mx.cfg.vocab_size, seed=13, n=3)
+    want = _sequential_tokens(mx, params, reqs)
+
+    def boom(*a, **k):
+        raise AssertionError("dense decode fell back to the XLA reference")
+    monkeypatch.setattr(ref, "decode_attention_ref", boom)
+
+    cbe = ContinuousBatchingEngine(mp, params, n_slots=2, max_len=MAX_LEN,
+                                   paged=False, plan=_tp_plan())
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+    assert any(_is_distributed(l) for l in jax.tree.leaves(cbe.pool.cache))
+
+
+def test_sharded_dense_decode_attention_kernel():
+    """ops.decode_attention with mesh= shard_maps over the head axes and
+    matches the reference; indivisible head counts fall back to one
+    unwrapped kernel call."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 8, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 8, 32, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 8, 32, 16), jnp.float32)
+    lengths = jnp.asarray([32, 11], jnp.int32)
+
+    mesh8 = jax.make_mesh((1, 8), ("data", "model"))
+    got = ops.decode_attention(q, k, v, lengths, mesh=mesh8)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.decode_attention_ref(q, k, v,
+                                                             lengths)),
+        atol=2e-5)
+    # GQA 8:4 on a 4-way model axis; scalar length broadcast inside
+    mesh4 = jax.make_mesh((2, 4), ("data", "model"))
+    got = ops.decode_attention(q, k[:, :4], v[:, :4], 20, mesh=mesh4)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.decode_attention_ref(q, k[:, :4], v[:, :4], 20)),
+        atol=2e-5)
+    # 3 KV heads cannot split 8 ways: unwrapped single call, no error
+    got = ops.decode_attention(q[:, :3], k[:, :3], v[:, :3], lengths,
+                               mesh=mesh8)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.decode_attention_ref(q[:, :3], k[:, :3], v[:, :3],
+                                            lengths)), atol=2e-5)
+
+
+def test_sharded_quantized_arena_no_fallback(monkeypatch):
+    """kv_dtype='int8' under TP: the scale arenas shard with their pages,
+    decode runs the dequantizing Pallas kernel (XLA oracle patched to
+    raise) and greedy tokens match the single-device int8 XLA engine."""
+    from repro.kernels import ref
+
+    kw = dict(n_layers=2, n_heads=8, n_kv_heads=8, head_dim=16)
+    mp = get_smoke_model("qwen3-14b", attn_impl="pallas", **kw)
+    mx = get_smoke_model("qwen3-14b", attn_impl="xla", **kw)
+    params = mx.init_params(jax.random.PRNGKey(0))
+    reqs = _mixed_requests(mx.cfg.vocab_size, seed=17, n=3)
+    xla_eng = ContinuousBatchingEngine(mx, params, n_slots=2,
+                                       max_len=MAX_LEN, page_size=4,
+                                       kv_dtype="int8")
+    rids = [xla_eng.submit(p, k) for p, k in reqs]
+    res = xla_eng.run()
+    want = [res[r].tokens for r in rids]
+
+    def boom(*a, **k):
+        raise AssertionError("quantized decode fell back to the XLA oracle")
+    monkeypatch.setattr(ref, "paged_decode_attention_ref", boom)
+
+    cbe = ContinuousBatchingEngine(mp, params, n_slots=2, max_len=MAX_LEN,
+                                   page_size=4, plan=_tp_plan(),
+                                   kv_dtype="int8")
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+    assert "k_scale" in cbe.pool.cache
+    assert any(_is_distributed(l) for l in jax.tree.leaves(cbe.pool.cache))
+
+
 def test_sharded_streamed_prefill_mid_flight_mla():
     """MLA (latent-KV attention) admission while the sharded weight
     stream is in flight: the layer-streamed prefill path — including a

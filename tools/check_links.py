@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Fail CI when a relative markdown link points at a missing file.
+
+Scans ``README.md``, everything under ``docs/``, and
+``benchmarks/README.md`` for inline links and images
+(``[text](target)`` / ``![alt](target)``), resolves each relative
+target against the file that contains it, and exits non-zero listing
+every target that does not exist in the working tree.  External
+schemes (http/https/mailto) and pure in-page anchors (``#...``) are
+skipped; a ``path#fragment`` target is checked for ``path`` only.
+
+Stdlib only — runs anywhere Python does:
+
+    python tools/check_links.py          # repo root
+    python tools/check_links.py extra.md # additional files to scan
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_TARGETS = ["README.md", "docs", "benchmarks/README.md"]
+
+# inline links/images; [text](target "title") titles are stripped below.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^()\s]+(?:\([^()]*\))?[^()]*)\)")
+_SKIP = re.compile(r"^(?:[a-zA-Z][a-zA-Z0-9+.-]*:|#)")
+
+
+def iter_markdown(paths):
+    for raw in paths:
+        p = ROOT / raw
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md" and p.exists():
+            yield p
+        else:
+            yield p  # missing input: reported as a broken source below
+
+
+def check_file(md: Path):
+    """Yield (lineno, target) for every broken relative link in ``md``."""
+    if not md.exists():
+        yield 0, f"(source file missing: {md})"
+        return
+    in_fence = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in _LINK.findall(line):
+            target = target.split('"')[0].strip().rstrip("/")
+            if not target or _SKIP.match(target):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.is_relative_to(ROOT):
+                # climbs out of the repo on purpose (e.g. the CI badge,
+                # which GitHub resolves server-side) — not checkable here
+                continue
+            if not resolved.exists():
+                yield lineno, target
+
+
+def main(argv):
+    targets = DEFAULT_TARGETS + argv
+    broken = []
+    n_files = 0
+    for md in iter_markdown(targets):
+        n_files += 1
+        for lineno, target in check_file(md):
+            broken.append(f"{md.relative_to(ROOT)}:{lineno}: {target}")
+    if broken:
+        print(f"{len(broken)} broken relative link(s):")
+        print("\n".join("  " + b for b in broken))
+        return 1
+    print(f"checked {n_files} markdown file(s): all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
