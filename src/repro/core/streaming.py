@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer
-from repro.models.layers import embed_tokens, lm_head, rmsnorm
+from repro.models import ssm, transformer
+from repro.models.layers import (attention_block, embed_tokens, lm_head,
+                                 mlp_block, rmsnorm)
 from repro.models.registry import Model
 from repro.utils import path_str
 
@@ -143,11 +144,39 @@ class ForkSession:
 
 
 # ---------------------------------------------------------------------------
-# layer-streamed prefill (dense / moe / mla families)
+# layer-streamed prefill (dense / moe / mla + xlstm / zamba hybrids)
 # ---------------------------------------------------------------------------
 
 def supports_streamed_prefill(model: Model) -> bool:
-    return model.cfg.family in ("dense", "moe") and not model.is_encdec
+    return (model.cfg.family in ("dense", "moe", "xlstm", "zamba")
+            and not model.is_encdec)
+
+
+def _subtree_paths(model: Model, group: str) -> tuple:
+    """Leaf paths (and treedef) of one top-level param group."""
+    specs = model.init_params(abstract=True)[group]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    return [f"{group}." + path_str(p) for p, _ in flat], treedef
+
+
+def _subtree_at(session: ForkSession, paths: list, treedef, layer: int):
+    """One layer's param subtree, waiting only on that layer's slices."""
+    return jax.tree_util.tree_unflatten(
+        treedef, [session.block_slice(p, layer) for p in paths])
+
+
+def _subtree_whole(session: ForkSession, paths: list, treedef):
+    return jax.tree_util.tree_unflatten(
+        treedef, [session.leaf(p) for p in paths])
+
+
+def _streamed_head(session: ForkSession, cfg, x):
+    """Shared tail: final norm + LM head over the last position."""
+    x = rmsnorm(x[:, -1:, :], session.leaf("final_norm"), cfg.norm_eps)
+    head_params = {"embed": session.leaf("embed")}
+    if not cfg.tied_embeddings:
+        head_params["lm_head"] = session.leaf("lm_head")
+    return lm_head(x, head_params, cfg.tied_embeddings)[:, 0]
 
 
 def streamed_prefill(session: ForkSession, inputs: dict, cache, offset: int = 0):
@@ -158,11 +187,22 @@ def streamed_prefill(session: ForkSession, inputs: dict, cache, offset: int = 0)
     prompt SUFFIX at positions ``offset..`` over a cache whose first
     ``offset`` positions hold a reused prefix (prefix KV sharing from a
     still-streaming fork): positions, RoPE and the mask carry the offset,
-    matching ``model.prefill_from``.
+    matching ``model.prefill_from``.  The hybrid families (xlstm, zamba)
+    stream block-by-block in the same execution order their scans run —
+    their recurrent state is not position-addressable, so they support
+    only ``offset=0``.
     """
     model = session.model
     cfg = model.cfg
     assert supports_streamed_prefill(model)
+    if cfg.family in ("xlstm", "zamba"):
+        if offset:
+            raise ValueError(
+                f"{cfg.name}: {cfg.family!r} recurrent state has no "
+                "suffix-only streamed prefill")
+        if cfg.family == "xlstm":
+            return _streamed_prefill_xlstm(session, inputs["tokens"], cache)
+        return _streamed_prefill_zamba(session, inputs["tokens"], cache)
 
     tokens = inputs["tokens"]
     B, S = tokens.shape
@@ -197,3 +237,115 @@ def streamed_prefill(session: ForkSession, inputs: dict, cache, offset: int = 0)
 
     new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *new_layer_caches)
     return logits[:, 0], new_cache
+
+
+def _streamed_prefill_xlstm(session: ForkSession, tokens, cache):
+    """xLSTM streamed prefill: mLSTM blocks (and one sLSTM per unit when
+    ``slstm_every`` is set) run as their weights land, in the exact order
+    ``transformer._xlstm_stack`` scans them.  One jitted executable per
+    block kind, reused across every layer."""
+    model = session.model
+    cfg = model.cfg
+    m_paths, m_tree = _subtree_paths(model, "mlstm")
+
+    @jax.jit
+    def m_fn(bp, bc, h):
+        y, ns = ssm.mlstm_mixer(bp["mixer"],
+                                rmsnorm(h, bp["norm"], cfg.norm_eps), cfg, bc)
+        return h + y, ns
+
+    x = embed_tokens(session.leaf("embed"), tokens,
+                     scale_by_dim=cfg.scale_embed)
+    every = cfg.slstm_every
+    new_m: list = []
+    if not every:
+        for l in range(cfg.n_layers):
+            bp = _subtree_at(session, m_paths, m_tree, l)
+            bc = jax.tree.map(lambda t: t[l], cache["mlstm"])
+            x, ns = m_fn(bp, bc, x)
+            new_m.append(ns)
+        return (_streamed_head(session, cfg, x),
+                {"mlstm": jax.tree.map(lambda *ls: jnp.stack(ls), *new_m)})
+
+    s_paths, s_tree = _subtree_paths(model, "slstm")
+
+    @jax.jit
+    def s_fn(sp_, sc, h):
+        y, new_sc = ssm.slstm_mixer(sp_["mixer"],
+                                    rmsnorm(h, sp_["norm"], cfg.norm_eps),
+                                    cfg, sc)
+        h = h + y
+        hn = rmsnorm(h, sp_["mlp_norm"], cfg.norm_eps)
+        h = h + mlp_block(sp_["mixer"]["mlp"], hn, cfg.act)
+        return h, new_sc
+
+    n_units = cfg.n_layers // every
+    m_per = every - 1
+    new_s: list = []
+    for u in range(n_units):
+        for j in range(m_per):
+            l = u * m_per + j
+            bp = _subtree_at(session, m_paths, m_tree, l)
+            bc = jax.tree.map(lambda t: t[l], cache["mlstm"])
+            x, ns = m_fn(bp, bc, x)
+            new_m.append(ns)
+        sp_ = _subtree_at(session, s_paths, s_tree, u)
+        sc = jax.tree.map(lambda t: t[u], cache["slstm"])
+        x, new_sc = s_fn(sp_, sc, x)
+        new_s.append(new_sc)
+    return (_streamed_head(session, cfg, x),
+            {"mlstm": jax.tree.map(lambda *ls: jnp.stack(ls), *new_m),
+             "slstm": jax.tree.map(lambda *ls: jnp.stack(ls), *new_s)})
+
+
+def _streamed_prefill_zamba(session: ForkSession, tokens, cache):
+    """Zamba2 streamed prefill: ``attn_every`` mamba blocks then the
+    SHARED attention+mlp per unit, matching ``transformer._zamba_stack``.
+    The shared block's weights are fetched once (they are the densest
+    single transfer) and its executable is reused by every unit."""
+    model = session.model
+    cfg = model.cfg
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    m_paths, m_tree = _subtree_paths(model, "mamba")
+    a_paths, a_tree = _subtree_paths(model, "shared_attn")
+
+    @jax.jit
+    def m_fn(bp, bc, h):
+        y, ns = ssm.mamba2_mixer(bp["mixer"],
+                                 rmsnorm(h, bp["norm"], cfg.norm_eps),
+                                 cfg, bc)
+        return h + y, ns
+
+    @jax.jit
+    def a_fn(shared, kv, h):
+        hn = rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
+        a, new_kv = attention_block(shared["attn"], hn, cfg, positions,
+                                    kv, jnp.int32(0))
+        h = h + a
+        hn = rmsnorm(h, shared["mlp_norm"], cfg.norm_eps)
+        h = h + mlp_block(shared["mlp"], hn, cfg.act)
+        return h, new_kv
+
+    x = embed_tokens(session.leaf("embed"), tokens,
+                     scale_by_dim=cfg.scale_embed)
+    every = cfg.attn_every
+    n_units = cfg.n_layers // every
+    shared = None
+    new_m: list = []
+    new_kv: list = []
+    for u in range(n_units):
+        for j in range(every):
+            l = u * every + j
+            bp = _subtree_at(session, m_paths, m_tree, l)
+            bc = jax.tree.map(lambda t: t[l], cache["mamba"])
+            x, ns = m_fn(bp, bc, x)
+            new_m.append(ns)
+        if shared is None:
+            shared = _subtree_whole(session, a_paths, a_tree)
+        kv = jax.tree.map(lambda t: t[u], cache["attn_kv"])
+        x, nk = a_fn(shared, kv, x)
+        new_kv.append(nk)
+    return (_streamed_head(session, cfg, x),
+            {"mamba": jax.tree.map(lambda *ls: jnp.stack(ls), *new_m),
+             "attn_kv": jax.tree.map(lambda *ls: jnp.stack(ls), *new_kv)})

@@ -279,6 +279,34 @@ def batch_specs(batch_tree, mesh: Mesh, seq_parallel: bool = False):
     return jax.tree.map(choose, batch_tree)
 
 
+# Recurrent-state cache groups (stacked [L, B, ...] leaves with NO
+# sequence axis).  Explicit per-leaf TP dims — shapes from
+# ``ssm.{mamba2,mlstm,slstm}_state_shape``:
+#   mamba.h    [L,B,H,dh,ds]   heads -> 'model'
+#   mamba.conv [L,B,W-1,ch]    conv channels (last) -> 'model'
+#   mlstm.C    [L,B,H,dh,dh]   heads -> 'model'
+#   mlstm.n/m  [L,B,H(,dh)]    heads -> 'model'
+#   mlstm.conv [L,B,W-1,d_in]  conv channels (last) -> 'model'
+#   slstm.*    [L,B,H,dh]      heads -> 'model'
+_SSM_CACHE_PREFIXES = ("mamba.", "mlstm.", "slstm.")
+
+
+def _ssm_model_dims(path: str, ndim: int) -> list:
+    """Candidate 'model' dims for one recurrent-state leaf, best first."""
+    if path.endswith(".conv"):
+        return [ndim - 1]                 # channels; NEVER the window dim
+    if path.startswith("mamba."):
+        # mamba2 h [L,B,H,dh,ds]: heads or REPLICATED.  Pinning dh or ds
+        # fights the SSD chunk einsums (their B/C operands propagate
+        # ds-factored shardings from the in_proj TP split) and the SPMD
+        # partitioner answers with involuntary full rematerializations
+        # of the [B,K,H,dh,ds] chunk states every step.
+        return [2]
+    # mLSTM/sLSTM states tolerate per-head-dim sharding (their update is
+    # a per-head outer product): heads first, then dh
+    return [2] + list(range(3, ndim))
+
+
 def cache_specs(model, cache_tree, mesh: Mesh, batch: int,
                 prefer_seq: bool = False, replicate_model: bool = False):
     """KV caches / recurrent state.  Leaves are stacked [L, B, ...].
@@ -308,13 +336,34 @@ def cache_specs(model, cache_tree, mesh: Mesh, batch: int,
             # SP prefill: K/V consumed fully by every seq shard — a
             # model-replicated cache makes writes and reads local
             return P(*[assign.get(d) for d in range(ndim)])
-        # attention caches have a seq dim at axis 2 (kv/mla/cross); pure
-        # recurrent states (mamba h, mLSTM C) do not
-        is_attn_cache = any(t in path for t in ("k", "v", "c_kv", "k_rope",
-                                                "kv"))
-        if prefer_seq and is_attn_cache and ndim >= 3 and 2 not in assign \
+        # recurrent SSM states (mamba/mLSTM/sLSTM) have NO seq dim — axis 2
+        # is heads (or the conv window).  Classify by the cache group, not
+        # by substring: "mamba.conv" / "mlstm.conv" contain 'v' and a
+        # name-based match would seq-shard a 3-wide conv window.
+        if path.startswith(_SSM_CACHE_PREFIXES):
+            assign.pop(2, None)          # never data-shard a head/window dim
+            for d in _ssm_model_dims(path, ndim):
+                if d not in assign and shape[d] % model_n == 0 \
+                        and shape[d] >= model_n:
+                    assign[d] = "model"
+                    break
+            return P(*[assign.get(d) for d in range(ndim)])
+        # attention caches (k/v, MLA c_kv/k_rope, hybrid attn_kv, cross)
+        # have their seq dim at axis 2
+        if prefer_seq and ndim >= 3 and 2 not in assign \
                 and shape[2] % model_n == 0 and shape[2] >= model_n:
             assign[2] = "model"
+        elif path.startswith("attn_kv."):
+            # hybrid shared-attention KV ([U,B,S,kv,hd]): kv heads over
+            # 'model', or REPLICATED.  Neither the seq axis nor head_dim
+            # is a TP fallback here: the shared block's projections leave
+            # k/v head-major-sharded, so pinning any other dim makes every
+            # decode-step cache update an involuntary full
+            # rematerialization in the SPMD partitioner (S=24 and hd=16
+            # divided the smoke mesh when the 4 heads did not).
+            if ndim > 3 and 3 not in assign and shape[3] % model_n == 0 \
+                    and shape[3] >= model_n:
+                assign[3] = "model"
         else:
             candidates = [d for d in list(range(3, ndim)) + [2] if ndim > d]
             for d in candidates:

@@ -1,0 +1,168 @@
+"""Batched multi-adapter LoRA: many functions, one resident base model.
+
+TIDAL's density play at the weight level.  Instead of materializing a
+merged ``W + A @ B`` per dynamic function (one engine and one full weight
+copy each), co-resident functions share ONE base model plus an
+**adapter bank** — stacked low-rank factors
+
+    a: [L, n_adapters, in_dim, rank]     b: [L, n_adapters, rank, out_dim]
+
+for each targeted attention projection.  Every decode batch carries a
+per-slot ``adapter_ids`` vector; inside the step the bank rows are
+gathered per sequence (``a[l, ids]``) and the low-rank delta
+``(x @ a) @ b`` is added to the base projection — S-LoRA-style batched
+multi-adapter serving, expressed as two einsums riding the existing
+``jax.lax.scan`` over layers (the bank's leading layer axis joins the
+scan's xs).
+
+Adapter id 0 is the NULL adapter: its factors are all-zero, so free and
+foreign slots in a slot-masked multi-tenant decode batch contribute a
+zero delta — the same dummy convention the paged arena's null page
+implements for KV.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import path_str
+
+ATTN_TARGETS = ("wq", "wk", "wv", "wo")
+
+
+def _target_name(path: str) -> str:
+    """Map a checkpoint target path to its projection name.
+
+    Accepts the ``lora_checkpoint`` path convention
+    (``blocks.attn.wq``) and bare projection names (``wq``).
+    """
+    name = path.rsplit(".", 1)[-1]
+    if name not in ATTN_TARGETS:
+        raise ValueError(
+            f"adapter target {path!r}: only attention projections "
+            f"{ATTN_TARGETS} support batched adapter gather")
+    return name
+
+
+def target_dims(cfg, name: str) -> tuple:
+    """(in_dim, out_dim) of one attention projection."""
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": (D, H * hd),
+        "wk": (D, KV * hd),
+        "wv": (D, KV * hd),
+        "wo": (H * hd, D),
+    }[name]
+
+
+def check_bank_config(model, target_paths, n_adapters: int) -> None:
+    """Raise early when a model/bank combination could never serve."""
+    cfg = model.cfg
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"{cfg.name}: adapter banks need the stacked dense/moe "
+            f"block layout, not family {cfg.family!r}")
+    if cfg.use_mla or cfg.fused_qkv:
+        raise ValueError(
+            f"{cfg.name}: adapter gather targets the unfused GQA "
+            "projections (wq/wk/wv/wo)")
+    if n_adapters < 2:
+        raise ValueError("n_adapters must be >= 2 (id 0 is the null adapter)")
+    for path in target_paths:
+        _target_name(path)
+
+
+def make_adapter_bank(model, target_paths, n_adapters: int,
+                      rank: int, dtype=None) -> dict:
+    """Allocate an all-zero adapter bank for ``model``.
+
+    Returns ``{name: {"a": [L, N, in, r], "b": [L, N, r, out]}}`` per
+    targeted projection.  Zero-initialized: every id is the null adapter
+    until :func:`load_adapter` writes its factors, and id 0 stays null
+    forever (reserved for free/foreign decode slots).
+    """
+    cfg = model.cfg
+    check_bank_config(model, target_paths, n_adapters)
+    dt = jnp.dtype(dtype or cfg.dtype)
+    L = cfg.n_layers
+    bank = {}
+    for path in target_paths:
+        name = _target_name(path)
+        din, dout = target_dims(cfg, name)
+        bank[name] = {
+            "a": jnp.zeros((L, n_adapters, din, rank), dt),
+            "b": jnp.zeros((L, n_adapters, rank, dout), dt),
+        }
+    return bank
+
+
+def bank_n_adapters(bank: dict) -> int:
+    """Adapter capacity of a bank (including the reserved null id 0)."""
+    return next(iter(bank.values()))["a"].shape[1]
+
+
+def load_adapter(bank: dict, idx: int, adapter, model,
+                 alpha: float = 1.0) -> dict:
+    """Write one ``lora_checkpoint``'s factors into bank row ``idx``.
+
+    ``adapter`` is a :class:`repro.core.fingerprint.Checkpoint` holding
+    ``<path>.A`` ([L*in, r]) / ``<path>.B`` ([r, out]) arrays per target.
+    The per-layer slices of A land in ``a[:, idx]``; B (shared across
+    layers in the checkpoint) broadcasts over the layer axis, pre-scaled
+    by ``alpha`` so gather-time math is just two einsums.  Returns the
+    updated bank (functional update — banks ride jit arguments).
+    """
+    n = bank_n_adapters(bank)
+    if not (1 <= idx < n):
+        raise ValueError(
+            f"adapter idx {idx} out of range [1, {n}) (0 is the null id)")
+    cfg = model.cfg
+    L = cfg.n_layers
+    specs = model.init_params(abstract=True)
+    by_path = {path_str(p): s
+               for p, s in jax.tree_util.tree_leaves_with_path(specs)}
+    target_paths = sorted({k.rsplit(".", 1)[0] for k in adapter.arrays})
+    new = {k: dict(v) for k, v in bank.items()}
+    for path in target_paths:
+        name = _target_name(path)
+        if name not in new:
+            raise ValueError(
+                f"adapter targets {path!r} but the bank has no "
+                f"{name!r} slab (bank targets: {sorted(new)})")
+        din, dout = target_dims(cfg, name)
+        spec = by_path[path]
+        if tuple(spec.shape) != (L, din, dout):
+            raise ValueError(
+                f"{path}: expected a stacked [{L}, {din}, {dout}] "
+                f"projection, got {tuple(spec.shape)}")
+        a = np.asarray(adapter.arrays[path + ".A"])
+        b = np.asarray(adapter.arrays[path + ".B"])
+        rank = new[name]["a"].shape[-1]
+        if a.shape != (L * din, rank) or b.shape != (rank, dout):
+            raise ValueError(
+                f"{path}: factor shapes {a.shape}/{b.shape} do not fit "
+                f"bank rank {rank}")
+        dt = new[name]["a"].dtype
+        a_l = a.reshape(L, din, rank).astype(dt)
+        b_l = np.broadcast_to((b * alpha).astype(dt), (L, rank, dout))
+        new[name]["a"] = new[name]["a"].at[:, idx].set(a_l)
+        new[name]["b"] = new[name]["b"].at[:, idx].set(b_l)
+    return new
+
+
+def lora_delta(x: jax.Array, slab: dict,
+               adapter_ids: Optional[jax.Array]) -> jax.Array:
+    """Per-sequence low-rank delta of one projection.
+
+    ``x``: [B, S, in]; ``slab``: one bank entry already sliced to a layer
+    (``{"a": [N, in, r], "b": [N, r, out]}``); ``adapter_ids``: [B] int32
+    (0 = null adapter = zero delta).  Returns [B, S, out].
+    """
+    a = jnp.take(slab["a"], adapter_ids, axis=0)        # [B, in, r]
+    b = jnp.take(slab["b"], adapter_ids, axis=0)        # [B, r, out]
+    t = jnp.einsum("bsi,bir->bsr", x, a)
+    return jnp.einsum("bsr,bro->bso", t, b).astype(x.dtype)

@@ -152,6 +152,8 @@ def attention_block(
     causal: bool = True,
     page_table: Optional[jax.Array] = None,  # [B, NB]: block-paged decode
     page_size: int = 0,
+    adapters: Optional[dict] = None,    # per-layer bank slices {name: slab}
+    adapter_ids: Optional[jax.Array] = None,  # [B] int32, 0 = null adapter
 ):
     """GQA/MQA attention with optional KV cache.
 
@@ -166,11 +168,19 @@ def attention_block(
     ``[P, page_size, KV, hd]`` instead of per-sequence rows: logical block
     ``j`` of sequence ``b`` lives in physical page ``page_table[b, j]``
     (page 0 is the runtime's null page).  Paged mode is decode-only.
+
+    With ``adapters`` (batched multi-adapter LoRA), each targeted
+    projection adds its per-sequence low-rank delta — adapter row
+    ``adapter_ids[b]`` gathered from the bank slice — before biases,
+    norms and RoPE, matching the merged-weight ``W + A @ B`` oracle.
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // KV
 
+    if adapters is not None and cfg.fused_qkv:
+        raise NotImplementedError(
+            "adapter gather targets the unfused wq/wk/wv/wo projections")
     if cfg.fused_qkv:
         qkv = jnp.einsum("bsd,de->bse", x, p["wqkv"])
         nq = H * hd
@@ -181,6 +191,14 @@ def attention_block(
         q = jnp.einsum("bsd,de->bse", x, p["wq"])
         k = jnp.einsum("bsd,de->bse", x, p["wk"])
         v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if adapters is not None:
+        from repro.models.adapters import lora_delta
+        if "wq" in adapters:
+            q = q + lora_delta(x, adapters["wq"], adapter_ids)
+        if "wk" in adapters:
+            k = k + lora_delta(x, adapters["wk"], adapter_ids)
+        if "wv" in adapters:
+            v = v + lora_delta(x, adapters["wv"], adapter_ids)
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, H, hd)
@@ -314,6 +332,9 @@ def attention_block(
 
     out = out.reshape(B, S, H * hd)
     y = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    if adapters is not None and "wo" in adapters:
+        from repro.models.adapters import lora_delta
+        y = y + lora_delta(out, adapters["wo"], adapter_ids)
     return y, new_cache
 
 

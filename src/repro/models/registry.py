@@ -95,13 +95,17 @@ class Model:
                                    batch["labels"])
 
     # ---- serving -----------------------------------------------------------
-    def prefill(self, params, inputs: dict, cache):
+    def prefill(self, params, inputs: dict, cache, adapter_bank=None,
+                adapter_ids=None):
         if self.is_encdec:
             return encdec.prefill(params, self.cfg, inputs["frames"],
                                   inputs["tokens"], cache)
-        return transformer.prefill(params, self.cfg, inputs["tokens"], cache)
+        return transformer.prefill(params, self.cfg, inputs["tokens"], cache,
+                                   adapter_bank=adapter_bank,
+                                   adapter_ids=adapter_ids)
 
-    def prefill_from(self, params, inputs: dict, cache, offset):
+    def prefill_from(self, params, inputs: dict, cache, offset,
+                     adapter_bank=None, adapter_ids=None):
         """Suffix-only prefill against a cache holding a reused prompt
         prefix of ``offset`` tokens (prefix KV sharing: positions, RoPE
         and the causal mask are offset by the reused length)."""
@@ -109,7 +113,9 @@ class Model:
             raise ValueError(
                 f"{self.cfg.name}: enc-dec has no suffix-only prefill")
         return transformer.prefill_from(params, self.cfg, inputs["tokens"],
-                                        cache, offset)
+                                        cache, offset,
+                                        adapter_bank=adapter_bank,
+                                        adapter_ids=adapter_ids)
 
     def decode_step(self, params, cache, inputs: dict, pos):
         """One decode step.  ``pos`` is a scalar (whole batch at one
@@ -123,15 +129,20 @@ class Model:
                                        inputs["tokens"], pos)
 
     def decode_step_paged(self, params, cache, inputs: dict, pos,
-                          page_table, page_size: int):
+                          page_table, page_size: int, adapter_bank=None,
+                          adapter_ids=None):
         """One decode step over a block-paged arena: ``pos`` is an int32
         vector [B] of per-sequence positions and ``page_table`` [B, NB]
-        maps each sequence's logical blocks to physical pages."""
+        maps each sequence's logical blocks to physical pages.  With an
+        ``adapter_bank``, ``adapter_ids`` [B] gathers each slot's LoRA
+        delta inside the step (0 = null adapter)."""
         pos = jnp.asarray(pos, jnp.int32)
         page_table = jnp.asarray(page_table, jnp.int32)
         return transformer.decode_step_paged(params, self.cfg, cache,
                                              inputs["tokens"], pos,
-                                             page_table, page_size)
+                                             page_table, page_size,
+                                             adapter_bank=adapter_bank,
+                                             adapter_ids=adapter_ids)
 
     # ---- cache slot pooling (continuous batching) -----------------------
     # Every cache leaf across all families lays batch out on axis 1 (axis 0

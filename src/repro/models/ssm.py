@@ -157,6 +157,21 @@ def mamba2_mixer(p: dict, x: jax.Array, cfg: ModelConfig,
     Q = min(cfg.ssm_chunk, S)
     if S > 1 and S % Q == 0:
         # chunked SSD path (training / prefill), seeded from `state` if given
+        from repro.distributed.sharding import current_kernel_mesh
+        mesh = current_kernel_mesh()
+        if mesh is not None and H % mesh.shape["model"]:
+            # indivisible head count (smoke shapes, tiny TP pods): left
+            # unconstrained, GSPMD pins factored (head x state) shardings
+            # on the chunk einsums and answers with involuntary full
+            # rematerializations of the [B,K,H,dh,ds] chunk states; keep
+            # the SSD shard-local instead (the state specs in
+            # repro.distributed.sharding are head-sharded-or-replicated
+            # to match)
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(mesh, PartitionSpec())
+            xb, B_mat, C_mat, log_decay = (
+                jax.lax.with_sharding_constraint(t, rep)
+                for t in (xb, B_mat, C_mat, log_decay))
         h0 = state["h"].astype(jnp.float32) if state is not None else None
         y, hK = _ssd_chunked(xb, B_mat, C_mat, log_decay, cfg.ssm_chunk, h0)
         new_state = {"h": hK, "conv": new_conv}

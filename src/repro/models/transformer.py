@@ -228,9 +228,13 @@ def make_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
 # ---------------------------------------------------------------------------
 
 def _dense_block(bp, x, cfg, positions, kv_cache, cache_pos,
-                 page_table=None, page_size=0):
+                 page_table=None, page_size=0, adapters=None,
+                 adapter_ids=None):
     h = rmsnorm(x, bp["attn_norm"], cfg.norm_eps)
     if cfg.use_mla:
+        if adapters is not None:
+            raise NotImplementedError(
+                "adapter gather targets the GQA projections, not MLA")
         a, new_cache = mla_attention_block(bp["attn"], h, cfg, positions,
                                            kv_cache, cache_pos,
                                            page_table=page_table,
@@ -239,7 +243,9 @@ def _dense_block(bp, x, cfg, positions, kv_cache, cache_pos,
         a, new_cache = attention_block(bp["attn"], h, cfg, positions,
                                        kv_cache, cache_pos,
                                        page_table=page_table,
-                                       page_size=page_size)
+                                       page_size=page_size,
+                                       adapters=adapters,
+                                       adapter_ids=adapter_ids)
     x = x + a
     h = rmsnorm(x, bp["mlp_norm"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
@@ -252,24 +258,33 @@ def _dense_block(bp, x, cfg, positions, kv_cache, cache_pos,
 
 
 def _scan_decoder_blocks(params, cfg, x, positions, cache, cache_pos,
-                         training, page_table=None, page_size=0):
+                         training, page_table=None, page_size=0,
+                         adapter_bank=None, adapter_ids=None):
     """Scan over stacked dense/moe blocks.  cache may be None (training).
     ``page_table`` (shared across layers, not scanned) switches the
-    per-layer cache slices to the block-paged arena layout."""
+    per-layer cache slices to the block-paged arena layout.  An
+    ``adapter_bank`` (leading layer axis) joins the scan's xs so each
+    block gathers its own per-layer adapter slices."""
 
     def body(carry, xs):
         h = carry
-        bp, bc = xs
+        if adapter_bank is None:
+            bp, bc = xs
+            ab = None
+        else:
+            bp, bc, ab = xs
         h, new_c, aux = _dense_block(bp, h, cfg, positions, bc, cache_pos,
                                      page_table=page_table,
-                                     page_size=page_size)
+                                     page_size=page_size,
+                                     adapters=ab, adapter_ids=adapter_ids)
         return h, (new_c, aux)
 
     body_fn = body
     if training and cfg.remat:
         body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
 
-    xs = (params["blocks"], cache)
+    xs = ((params["blocks"], cache) if adapter_bank is None
+          else (params["blocks"], cache, adapter_bank))
     x, (new_cache, auxs) = jax.lax.scan(body_fn, x, xs)
     return x, new_cache, jnp.sum(auxs)
 
@@ -407,17 +422,24 @@ def _zamba_stack(params, cfg, x, positions, cache, cache_pos, training):
 # entry points
 # ---------------------------------------------------------------------------
 
-def _backbone(params, cfg, x, positions, cache, cache_pos, training):
-    if cfg.family == "xlstm":
-        x, new_cache = _xlstm_stack(params, cfg, x, cache, training)
-        aux = jnp.zeros((), jnp.float32)
-    elif cfg.family == "zamba":
-        x, new_cache = _zamba_stack(params, cfg, x, positions, cache,
-                                    cache_pos, training)
+def _backbone(params, cfg, x, positions, cache, cache_pos, training,
+              adapter_bank=None, adapter_ids=None):
+    if cfg.family in ("xlstm", "zamba"):
+        if adapter_bank is not None:
+            raise NotImplementedError(
+                f"{cfg.family!r}: adapter gather needs the stacked "
+                "dense/moe block layout")
+        if cfg.family == "xlstm":
+            x, new_cache = _xlstm_stack(params, cfg, x, cache, training)
+        else:
+            x, new_cache = _zamba_stack(params, cfg, x, positions, cache,
+                                        cache_pos, training)
         aux = jnp.zeros((), jnp.float32)
     else:
         x, new_cache, aux = _scan_decoder_blocks(params, cfg, x, positions,
-                                                 cache, cache_pos, training)
+                                                 cache, cache_pos, training,
+                                                 adapter_bank=adapter_bank,
+                                                 adapter_ids=adapter_ids)
     return x, new_cache, aux
 
 
@@ -434,20 +456,26 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return logits, aux
 
 
-def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Cache):
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, cache: Cache,
+            adapter_bank: Optional[dict] = None,
+            adapter_ids: Optional[jax.Array] = None):
     """Process the prompt, fill the cache; returns (last-token logits, cache)."""
     B, S = tokens.shape
     x = embed_tokens(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
     positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
     x, new_cache, _ = _backbone(params, cfg, x, positions, cache,
-                                jnp.int32(0), training=False)
+                                jnp.int32(0), training=False,
+                                adapter_bank=adapter_bank,
+                                adapter_ids=adapter_ids)
     x = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
     logits = lm_head(x, params, cfg.tied_embeddings)
     return logits[:, 0], new_cache
 
 
 def prefill_from(params: Params, cfg: ModelConfig, tokens: jax.Array,
-                 cache: Cache, offset: jax.Array):
+                 cache: Cache, offset: jax.Array,
+                 adapter_bank: Optional[dict] = None,
+                 adapter_ids: Optional[jax.Array] = None):
     """Suffix-only prefill: process ``tokens`` as positions ``offset ..
     offset+S-1`` against a cache whose first ``offset`` positions are
     ALREADY filled (a reused prompt prefix).
@@ -468,7 +496,9 @@ def prefill_from(params: Params, cfg: ModelConfig, tokens: jax.Array,
     x = embed_tokens(params["embed"], tokens, scale_by_dim=cfg.scale_embed)
     positions = jnp.broadcast_to(offset + jnp.arange(S)[None, :], (B, S))
     x, new_cache, _ = _scan_decoder_blocks(params, cfg, x, positions, cache,
-                                           offset, training=False)
+                                           offset, training=False,
+                                           adapter_bank=adapter_bank,
+                                           adapter_ids=adapter_ids)
     x = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
     logits = lm_head(x, params, cfg.tied_embeddings)
     return logits[:, 0], new_cache
@@ -494,11 +524,15 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
 
 def decode_step_paged(params: Params, cfg: ModelConfig, cache: Cache,
                       tokens: jax.Array, pos: jax.Array,
-                      page_table: jax.Array, page_size: int):
+                      page_table: jax.Array, page_size: int,
+                      adapter_bank: Optional[dict] = None,
+                      adapter_ids: Optional[jax.Array] = None):
     """One decode step over a block-paged KV arena.  tokens: [B, 1];
     pos: int32 vector [B] of per-sequence positions; page_table: [B, NB]
     int32 physical page per logical block (the slot axis of the serving
-    pool).  ``cache`` comes from :func:`make_paged_cache`."""
+    pool).  ``cache`` comes from :func:`make_paged_cache`.  With an
+    ``adapter_bank``, ``adapter_ids`` [B] selects each slot's LoRA delta
+    (0 = null adapter for free/foreign slots)."""
     if not supports_paged_kv(cfg):
         raise ValueError(
             f"{cfg.name}: {cfg.family!r} family has no paged decode path")
@@ -508,7 +542,9 @@ def decode_step_paged(params: Params, cfg: ModelConfig, cache: Cache,
     x, new_cache, _ = _scan_decoder_blocks(params, cfg, x, positions, cache,
                                            pos, training=False,
                                            page_table=page_table,
-                                           page_size=page_size)
+                                           page_size=page_size,
+                                           adapter_bank=adapter_bank,
+                                           adapter_ids=adapter_ids)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(x, params, cfg.tied_embeddings)
     return logits[:, 0], new_cache

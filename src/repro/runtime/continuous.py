@@ -36,6 +36,19 @@ retirement frees pages — so arena capacity tracks the tokens that exist,
 not ``n_slots * max_len`` worst cases.  Recurrent-state families (SSM /
 xLSTM / hybrid) keep the dense slot pool; their state is constant-size.
 
+Engines sharing one paged arena CO-RESIDE (dense multi-tenancy): each
+registers an owner token with the pool and decodes under its own MASKED
+device page table, so a co-tenant's slots ride this engine's batched
+decode as null-page dummies — indistinguishable from free slots, shapes
+unchanged — and the gateway interleaves co-resident engines at quantum
+granularity instead of enforcing arena exclusivity.  On top of that, an
+``adapter_bank`` makes one engine serve MANY functions: each request
+carries an ``adapter_id`` and the decode step gathers its low-rank LoRA
+delta per slot (id 0 = null adapter for free/foreign slots), so
+thousands of dynamic functions co-batch on one resident base model.
+Dense (recurrent-state) pools still require exclusivity — their decode
+advances every slot's state and cannot be null-masked.
+
 Greedy decoding is bit-identical to the sequential ``Engine.generate``
 per request (tested): the per-slot position vector reproduces exactly the
 positions, cache writes and attention masks of an isolated batch-1 run.
@@ -44,6 +57,7 @@ positions, cache writes and attention masks of an isolated batch-1 run.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Optional
@@ -62,7 +76,8 @@ from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
 
 
 def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
-                      donate_cache: bool = True):
+                      donate_cache: bool = True,
+                      with_adapters: bool = False):
     """jit'd ``(prefill_fn, prefill_from_fn, decode_fn)`` serve entry
     points whose in/out shardings carry ``plan`` end to end: params arrive
     in their tensor-parallel layout, the pool arena keeps its placement
@@ -73,10 +88,16 @@ def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
     one).  Every entry point is called (and therefore traced) under
     ``use_kernel_mesh(plan.mesh)`` so ``attn_impl='pallas'`` shard_maps
     the attention kernels over the 'model' axis instead of silently
-    falling back to the XLA reference inside the partitioned jit."""
+    falling back to the XLA reference inside the partitioned jit.
+
+    ``with_adapters`` appends ``(adapter_bank, adapter_ids)`` arguments
+    (replicated — banks are low-rank and small) to every entry point for
+    batched multi-adapter serving."""
     rep = plan.replicated
     pshard = plan.param_shardings(model)
     paged = isinstance(pool, PagedKVCachePool)
+    if with_adapters and not paged:
+        raise ValueError("adapter banks serve over the paged arena only")
     prefill_len = pool.padded_len if paged else pool.max_len
     pc_shard = plan.cache_shardings(
         model, model.make_cache(1, prefill_len, abstract=True))
@@ -87,26 +108,51 @@ def sharded_serve_fns(model: Model, pool, plan: ShardingPlan,
                 return fn(*args)
         return wrapped
 
-    prefill_fn = _km(jax.jit(
-        lambda p, inputs, cache: model.prefill(p, inputs, cache),
-        in_shardings=(pshard, rep, pc_shard),
-        out_shardings=(rep, pc_shard)))
+    if with_adapters:
+        prefill_fn = _km(jax.jit(
+            lambda p, inputs, cache, bank, aids: model.prefill(
+                p, inputs, cache, adapter_bank=bank, adapter_ids=aids),
+            in_shardings=(pshard, rep, pc_shard, rep, rep),
+            out_shardings=(rep, pc_shard)))
+    else:
+        prefill_fn = _km(jax.jit(
+            lambda p, inputs, cache: model.prefill(p, inputs, cache),
+            in_shardings=(pshard, rep, pc_shard),
+            out_shardings=(rep, pc_shard)))
     prefill_from_fn = None
     if model.supports_paged_kv:
-        prefill_from_fn = _km(jax.jit(
-            lambda p, toks, cache, off: model.prefill_from(
-                p, {"tokens": toks}, cache, off),
-            in_shardings=(pshard, rep, pc_shard, rep),
-            out_shardings=(rep, pc_shard)))
+        if with_adapters:
+            prefill_from_fn = _km(jax.jit(
+                lambda p, toks, cache, off, bank, aids: model.prefill_from(
+                    p, {"tokens": toks}, cache, off,
+                    adapter_bank=bank, adapter_ids=aids),
+                in_shardings=(pshard, rep, pc_shard, rep, rep, rep),
+                out_shardings=(rep, pc_shard)))
+        else:
+            prefill_from_fn = _km(jax.jit(
+                lambda p, toks, cache, off: model.prefill_from(
+                    p, {"tokens": toks}, cache, off),
+                in_shardings=(pshard, rep, pc_shard, rep),
+                out_shardings=(rep, pc_shard)))
     if paged:
         ps = pool.page_size
         dshard = plan.paged_cache_shardings(model, pool.cache)
-        decode_fn = _km(jax.jit(
-            lambda p, cache, toks, pos, pt: model.decode_step_paged(
-                p, cache, {"tokens": toks}, pos, pt, ps),
-            in_shardings=(pshard, dshard, rep, rep, rep),
-            out_shardings=(rep, dshard),
-            donate_argnums=(1,) if donate_cache else ()))
+        if with_adapters:
+            decode_fn = _km(jax.jit(
+                lambda p, cache, toks, pos, pt, bank, aids:
+                model.decode_step_paged(
+                    p, cache, {"tokens": toks}, pos, pt, ps,
+                    adapter_bank=bank, adapter_ids=aids),
+                in_shardings=(pshard, dshard, rep, rep, rep, rep, rep),
+                out_shardings=(rep, dshard),
+                donate_argnums=(1,) if donate_cache else ()))
+        else:
+            decode_fn = _km(jax.jit(
+                lambda p, cache, toks, pos, pt: model.decode_step_paged(
+                    p, cache, {"tokens": toks}, pos, pt, ps),
+                in_shardings=(pshard, dshard, rep, rep, rep),
+                out_shardings=(rep, dshard),
+                donate_argnums=(1,) if donate_cache else ()))
     else:
         dshard = plan.cache_shardings(model, pool.cache)
         decode_fn = _km(jax.jit(
@@ -133,6 +179,7 @@ class Request:
     deadline_s: Optional[float] = None  # shed if still QUEUED past this
     priority: int = 0                # higher admits first (FIFO within)
     token_cb: Optional[Callable] = None  # (req_id, token, index) per emit
+    adapter_id: int = 0              # bank row (0 = null adapter / base)
     # prefix-reuse match, resolved lazily at first admission check and
     # cached ((handle, reuse_len) or None); _UNMATCHED = not yet looked up
     prefix_hit: Any = _UNMATCHED
@@ -187,7 +234,9 @@ class ContinuousBatchingEngine:
                  prefix_index: Optional[Any] = None,
                  bucket_suffix: bool = False,
                  chunk_tokens: Optional[int] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 adapter_bank: Optional[dict] = None,
+                 owner_name: Optional[str] = None):
         if model.is_encdec:
             raise NotImplementedError(
                 "continuous batching needs per-slot decode positions; the "
@@ -220,6 +269,16 @@ class ContinuousBatchingEngine:
                     raise ValueError(
                         "kv_dtype quantization needs the paged arena")
                 self.pool = KVCachePool(model, n_slots, max_len, plan=plan)
+        if adapter_bank is not None and not self.paged:
+            raise ValueError("adapter banks serve over the paged arena only")
+        self.adapter_bank = adapter_bank
+        # partition lease: paged pools are multi-tenant — this engine's
+        # slots file under its owner token and its decode steps run under
+        # the pool's masked page-table view, so co-resident engines on the
+        # same arena can interleave.  Dense pools have no mask (decode
+        # advances every slot's recurrent state) and stay exclusive.
+        self._owner = (self.pool.register_owner(owner_name)
+                       if self.paged else None)
         self.queue: collections.deque = collections.deque()
         self.active: dict = {}                       # slot -> _Active
         self.results: dict = {}                      # req_id -> RequestOutput
@@ -238,7 +297,25 @@ class ContinuousBatchingEngine:
                 prefill_from_fn is None and self.paged):
             if plan is not None:
                 default_p, default_pf, default_d = sharded_serve_fns(
-                    model, self.pool, plan, donate_cache=donate_cache)
+                    model, self.pool, plan, donate_cache=donate_cache,
+                    with_adapters=adapter_bank is not None)
+            elif adapter_bank is not None:
+                default_p = jax.jit(
+                    lambda p, inputs, cache, bank, aids: model.prefill(
+                        p, inputs, cache, adapter_bank=bank,
+                        adapter_ids=aids))
+                default_pf = jax.jit(
+                    lambda p, toks, cache, off, bank, aids:
+                    model.prefill_from(
+                        p, {"tokens": toks}, cache, off,
+                        adapter_bank=bank, adapter_ids=aids))
+                default_d = jax.jit(
+                    lambda p, cache, toks, pos, pt, bank, aids:
+                    model.decode_step_paged(
+                        p, cache, {"tokens": toks}, pos, pt,
+                        self.pool.page_size,
+                        adapter_bank=bank, adapter_ids=aids),
+                    donate_argnums=(1,) if donate_cache else ())
             else:
                 default_p = jax.jit(
                     lambda p, inputs, cache: model.prefill(p, inputs, cache))
@@ -284,6 +361,9 @@ class ContinuousBatchingEngine:
         # their logits are computed and discarded)
         self._tok = np.zeros((n_slots, 1), np.int32)
         self._pos = np.zeros((n_slots,), np.int32)
+        # per-slot adapter ids (0 = null adapter: free/foreign slots and
+        # base-model requests gather a zero delta)
+        self._aid = np.zeros((n_slots,), np.int32)
         self._step_tokens = 0            # work done by the last step()
 
     # ------------------------------------------------------------------
@@ -302,13 +382,23 @@ class ContinuousBatchingEngine:
     def n_pending(self) -> int:
         return len(self.queue) + len(self.active)
 
+    def set_adapter(self, idx: int, adapter, alpha: float = 1.0) -> None:
+        """Load a LoRA checkpoint into bank row ``idx`` (functional
+        update: in-flight steps keep the bank they were called with)."""
+        from repro.models.adapters import load_adapter
+        if self.adapter_bank is None:
+            raise ValueError("engine was built without an adapter bank")
+        self.adapter_bank = load_adapter(self.adapter_bank, idx, adapter,
+                                         self.model, alpha=alpha)
+
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 8,
                submit_s: Optional[float] = None,
                temperature: float = 0.0, top_p: float = 1.0,
                seed: int = 0, deadline_s: Optional[float] = None,
                priority: int = 0,
-               token_cb: Optional[Callable] = None) -> int:
+               token_cb: Optional[Callable] = None,
+               adapter_id: int = 0) -> int:
         """Enqueue one request.  ``submit_s`` backdates the arrival stamp so
         work done on the request's behalf before enqueueing (forking this
         engine's session, say) counts toward its TTFT.  ``temperature=0``
@@ -321,10 +411,19 @@ class ContinuousBatchingEngine:
         no prefill consumed) instead of admitted late.  ``priority`` ranks
         admission (higher first, FIFO within a rank).  ``token_cb`` is
         called as ``token_cb(req_id, token, index)`` the moment each token
-        is sampled — the gateway's streaming bridge."""
+        is sampled — the gateway's streaming bridge.  ``adapter_id``
+        selects the request's row of the engine's adapter bank (0 = the
+        base model / null adapter)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if adapter_id:
+            from repro.models.adapters import bank_n_adapters
+            if self.adapter_bank is None:
+                raise ValueError(
+                    "adapter_id set but the engine has no adapter bank")
+            if not (0 <= adapter_id < bank_n_adapters(self.adapter_bank)):
+                raise ValueError(f"adapter_id {adapter_id} out of range")
         if temperature < 0 or not (0 < top_p <= 1):
             raise ValueError("need temperature >= 0 and 0 < top_p <= 1")
         if len(prompt) + max_new_tokens > self.pool.max_len:
@@ -345,7 +444,8 @@ class ContinuousBatchingEngine:
                                   submit_s or time.perf_counter(),
                                   temperature=temperature, top_p=top_p,
                                   seed=seed, deadline_s=deadline_s,
-                                  priority=priority, token_cb=token_cb))
+                                  priority=priority, token_cb=token_cb,
+                                  adapter_id=adapter_id))
         return rid
 
     def cancel(self, req_id: int) -> bool:
@@ -446,6 +546,31 @@ class ContinuousBatchingEngine:
         head = self._queue_head()
         return head if self._can_admit(head) else None
 
+    def _call_prefill(self, inputs, cache, adapter_id: int):
+        """Whole-prompt prefill, threading the adapter bank when present."""
+        if self.adapter_bank is None:
+            return self.prefill_fn(self.params(), inputs, cache)
+        aids = jnp.asarray([adapter_id], jnp.int32)
+        return self.prefill_fn(self.params(), inputs, cache,
+                               self.adapter_bank, aids)
+
+    def _call_prefill_from(self, toks, cache, offset: int, adapter_id: int):
+        """Suffix-only prefill, threading the adapter bank when present."""
+        if self.adapter_bank is None:
+            return self.prefill_from_fn(self.params(), toks, cache,
+                                        jnp.int32(offset))
+        aids = jnp.asarray([adapter_id], jnp.int32)
+        return self.prefill_from_fn(self.params(), toks, cache,
+                                    jnp.int32(offset),
+                                    self.adapter_bank, aids)
+
+    def _kmesh(self):
+        """Kernel-mesh scope for streamed (per-block-jitted) prefills, so
+        in-model sharding constraints see the plan's mesh exactly like the
+        monolithic serve fns do."""
+        return (use_kernel_mesh(self.plan.mesh) if self.plan is not None
+                else contextlib.nullcontext())
+
     def _sample_first(self, req: Request, logits) -> int:
         if req.temperature <= 0:
             tok = sample_greedy(logits)
@@ -469,9 +594,11 @@ class ContinuousBatchingEngine:
             slot = self.pool.alloc(len(req.prompt), req.max_new_tokens,
                                    shared_prefix=hit[0] if hit else None,
                                    reuse_len=reuse,
-                                   budget_tokens=reuse + self.chunk_tokens)
+                                   budget_tokens=reuse + self.chunk_tokens,
+                                   owner=self._owner)
             self._tok[slot, 0] = 0
             self._pos[slot] = self.pool.padded_len - 1
+            self._aid[slot] = req.adapter_id
             self.active[slot] = _Active(req=req, slot=slot, tokens=[],
                                         streamed=False, ttft_s=0.0,
                                         reused_prefix_len=reuse,
@@ -480,10 +607,11 @@ class ContinuousBatchingEngine:
         if self.paged:
             slot = self.pool.alloc(len(req.prompt), req.max_new_tokens,
                                    shared_prefix=hit[0] if hit else None,
-                                   reuse_len=reuse)
+                                   reuse_len=reuse, owner=self._owner)
         else:
             slot = self.pool.alloc()
         streamed = (self.session is not None and self._params is None
+                    and self.adapter_bank is None
                     and supports_streamed_prefill(self.model))
         prefill_len = (self.pool.padded_len if self.paged
                        else self.pool.max_len)
@@ -494,11 +622,13 @@ class ContinuousBatchingEngine:
             cache = self.pool.read_slot_full(slot)
             suffix = jnp.asarray(req.prompt[None, reuse:])
             if streamed:
-                logits, cache = streamed_prefill(
-                    self.session, {"tokens": suffix}, cache, offset=reuse)
+                with self._kmesh():
+                    logits, cache = streamed_prefill(
+                        self.session, {"tokens": suffix}, cache,
+                        offset=reuse)
             else:
-                logits, cache = self.prefill_from_fn(
-                    self.params(), suffix, cache, jnp.int32(reuse))
+                logits, cache = self._call_prefill_from(
+                    suffix, cache, reuse, req.adapter_id)
         else:
             inputs = {"tokens": jnp.asarray(req.prompt[None, :])}
             # prefill runs on a transient batch-1 dense cache either way
@@ -508,13 +638,24 @@ class ContinuousBatchingEngine:
             if self.plan is not None:
                 cache = jax.device_put(cache, self._prefill_cache_shardings)
             if streamed:
-                logits, cache = streamed_prefill(self.session, inputs, cache)
+                with self._kmesh():
+                    logits, cache = streamed_prefill(self.session, inputs,
+                                                     cache)
+                if self.plan is not None:
+                    # per-block jits leave GSPMD-propagated shardings on
+                    # the filled cache; re-pin to the pool's layout so the
+                    # decode executable's in_shardings match
+                    cache = jax.device_put(cache,
+                                           self._prefill_cache_shardings)
             else:
-                logits, cache = self.prefill_fn(self.params(), inputs, cache)
+                logits, cache = self._call_prefill(inputs, cache,
+                                                   req.adapter_id)
         first = self._sample_first(req, logits)
         ttft = time.perf_counter() - req.submit_s
         if self.paged:
-            self.pool.write_suffix(slot, cache, reuse, len(req.prompt))
+            self.pool.write_suffix(slot, cache, reuse, len(req.prompt),
+                                   owner=self._owner)
+            self._aid[slot] = req.adapter_id
         else:
             self.pool.write_slot(slot, cache)
         self._tok[slot, 0] = first
@@ -545,7 +686,8 @@ class ContinuousBatchingEngine:
             # decode invariant: the FULL worst-case budget must be
             # reserved before the first generated token exists, so
             # ensure_len during decode can never fail
-            if not self.pool.extend_budget(slot, P + req.max_new_tokens):
+            if not self.pool.extend_budget(slot, P + req.max_new_tokens,
+                                           owner=self._owner):
                 return 0
             # re-run back to the last page boundary so the chunk length
             # stays a page multiple (the prewarmed bucket shapes);
@@ -556,19 +698,21 @@ class ContinuousBatchingEngine:
         else:
             start = st.cursor
             end = st.cursor + self.chunk_tokens
-            if not self.pool.extend_budget(slot, end):
+            if not self.pool.extend_budget(slot, end, owner=self._owner):
                 return 0
         cache = self.pool.read_slot_full(slot)
         toks = jnp.asarray(req.prompt[None, start:end])
         streamed = (self.session is not None and self._params is None
+                    and self.adapter_bank is None
                     and supports_streamed_prefill(self.model))
         if streamed:
-            logits, cache = streamed_prefill(
-                self.session, {"tokens": toks}, cache, offset=start)
+            with self._kmesh():
+                logits, cache = streamed_prefill(
+                    self.session, {"tokens": toks}, cache, offset=start)
         else:
-            logits, cache = self.prefill_from_fn(
-                self.params(), toks, cache, jnp.int32(start))
-        self.pool.write_suffix(slot, cache, start, end)
+            logits, cache = self._call_prefill_from(
+                toks, cache, start, req.adapter_id)
+        self.pool.write_suffix(slot, cache, start, end, owner=self._owner)
         st.streamed = st.streamed or streamed
         st.cursor = end
         if final:
@@ -588,9 +732,13 @@ class ContinuousBatchingEngine:
     def _retire(self, slot: int, status: str = "done",
                 error: Optional[str] = None) -> None:
         st = self.active.pop(slot)
-        self.pool.release(slot)
+        if self.paged:
+            self.pool.release(slot, owner=self._owner)
+        else:
+            self.pool.release(slot)
         self._tok[slot, 0] = 0
         self._pos[slot] = 0
+        self._aid[slot] = 0
         e2e = time.perf_counter() - st.req.submit_s
         self.results[st.req.req_id] = RequestOutput(
             req_id=st.req.req_id,
@@ -608,8 +756,9 @@ class ContinuousBatchingEngine:
     def _foreign_slots(self) -> int:
         """Slots of the pool allocated by a DIFFERENT engine (shared-pool
         runtimes lend one arena to several engines)."""
-        free = (self.pool.n_free_slots if self.paged else self.pool.n_free)
-        return (self.pool.n_slots - free) - len(self.active)
+        if self.paged:
+            return self.pool.n_foreign_slots(self._owner)
+        return (self.pool.n_slots - self.pool.n_free) - len(self.active)
 
     def step(self) -> bool:
         """One MIXED batched step: admit what fits, advance mid-prefill
@@ -617,20 +766,19 @@ class ContinuousBatchingEngine:
         decode over the slots past their prompt, retire the finished.
 
         Returns False once the engine is fully drained."""
-        if self.queue or self.active:
-            # a batched decode touches EVERY slot of the arena (free slots
-            # write their dummy token at position 0), so an engine must
-            # hold the shared pool exclusively while it decodes — another
-            # engine's in-flight slot would be silently corrupted (or, with
-            # no slots to admit into, this loop would spin forever).  The
-            # FaaS runtime drains engines one at a time; anything else is
-            # a bug worth a loud error, raised before touching the pool.
+        if (self.queue or self.active) and not self.paged:
+            # a DENSE pool's batched decode advances EVERY slot's
+            # recurrent state — there is no masked view that protects a
+            # co-tenant's slot — so dense-pool engines still borrow the
+            # arena exclusively.  (Paged engines decode under their
+            # owner-masked page table: foreign slots are null-page
+            # dummies, and co-residency is the normal state.)
             foreign = self._foreign_slots()
             if foreign > 0:
                 raise RuntimeError(
                     f"shared KV pool: {foreign} slot(s) held by another "
                     "engine; drain or evict it before decoding here "
-                    "(engines borrow the arena exclusively)")
+                    "(dense-pool engines borrow the arena exclusively)")
         self._shed_expired(time.perf_counter())
         self._step_tokens = 0
         admitted = 0
@@ -659,13 +807,19 @@ class ContinuousBatchingEngine:
         if not decoding:
             if not self.active:
                 if self.queue:
+                    if self.paged and self._foreign_slots() > 0:
+                        # co-tenants hold arena pages: their retirements
+                        # can still free capacity for this queue, so this
+                        # is back-pressure, not a livelock — yield the
+                        # quantum and retry after they run.
+                        self._step_tokens = chunked
+                        return True
                     # the pool is completely idle (no active slots here, no
-                    # foreign slots — checked above) yet the head request
-                    # still does not fit: nothing can ever retire to
-                    # unblock it — only pinned prefix pages occupy the
-                    # arena — so looping would livelock.  Drop the doomed
-                    # request (the queue behind it stays servable) and
-                    # surface the error.
+                    # foreign slots) yet the head request still does not
+                    # fit: nothing can ever retire to unblock it — only
+                    # pinned prefix pages occupy the arena — so looping
+                    # would livelock.  Drop the doomed request (the queue
+                    # behind it stays servable) and surface the error.
                     head = self._queue_head()
                     self.queue.remove(head)
                     msg = (
@@ -680,6 +834,12 @@ class ContinuousBatchingEngine:
                     raise PoolExhausted(msg)
                 return False
             if not admitted and not chunked:
+                if self.paged and self._foreign_slots() > 0:
+                    # a co-tenant's decode can still retire and free pages
+                    # for the wedged chunk budgets — defer the unwedge
+                    # verdict until this engine alone holds the arena.
+                    self._step_tokens = 0
+                    return True
                 # every slot is mid-prefill and none could extend its page
                 # budget this step (nor could anything be admitted): the
                 # chunked budgets have wedged against each other and no
@@ -704,12 +864,23 @@ class ContinuousBatchingEngine:
             # mid-prefill slots skip this — their dummy position's page is
             # deliberately unmapped (null-page write)
             for slot in decoding:
-                self.pool.ensure_len(slot, int(self._pos[slot]) + 1)
+                self.pool.ensure_len(slot, int(self._pos[slot]) + 1,
+                                     owner=self._owner)
             # the page table rides device-resident; only rows dirtied by
-            # admit/grow/retire re-upload (steady-state decode sends none)
-            logits, self.pool.cache = self.decode_fn(
-                self.params(), self.pool.cache, jnp.asarray(self._tok),
-                jnp.asarray(self._pos), self.pool.device_page_table())
+            # admit/grow/retire re-upload (steady-state decode sends none).
+            # The OWNER-masked view nulls co-tenants' rows, so their slots
+            # decode as free-slot dummies — the step never reads or writes
+            # a foreign slot's pages even though it spans every slot index.
+            pt = self.pool.device_page_table(self._owner)
+            if self.adapter_bank is not None:
+                logits, self.pool.cache = self.decode_fn(
+                    self.params(), self.pool.cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._pos), pt, self.adapter_bank,
+                    jnp.asarray(self._aid))
+            else:
+                logits, self.pool.cache = self.decode_fn(
+                    self.params(), self.pool.cache, jnp.asarray(self._tok),
+                    jnp.asarray(self._pos), pt)
         else:
             logits, self.pool.cache = self.decode_fn(
                 self.params(), self.pool.cache, jnp.asarray(self._tok),
@@ -781,4 +952,15 @@ class ContinuousBatchingEngine:
         for req in list(self.queue):
             self._record_dropped(req, "cancelled")
         self.queue.clear()
+        return n
+
+    def close(self) -> int:
+        """Tear the engine off its pool: release all in-flight work, then
+        retire the engine's slot-partition lease (dropping its masked
+        device page table and ownership bookkeeping).  A closed engine
+        must not step again.  Returns the number of abandoned requests."""
+        n = self.release_all()
+        if self.paged and self._owner is not None:
+            self.pool.release_owner(self._owner)
+            self._owner = None
         return n

@@ -54,6 +54,7 @@ from repro.core.api import LLMFunction
 from repro.core.prewarm import ExecutableCache, ProcessPool
 from repro.core.template_server import TemplateServer
 from repro.distributed.sharding import ShardingPlan, serving_plan
+from repro.models.adapters import check_bank_config, make_adapter_bank
 from repro.models.registry import get_smoke_model
 from repro.runtime.continuous import (ContinuousBatchingEngine,
                                       sharded_serve_fns)
@@ -74,6 +75,10 @@ class _WarmEngine:
     engine: ContinuousBatchingEngine
     last_used_s: float
     instance: int = 0
+    # shared-adapter engines: fn_name -> bank row already loaded, and the
+    # next free row (0 is the null adapter, never assigned)
+    adapter_ids: dict = dataclasses.field(default_factory=dict)
+    next_adapter_id: int = 1
 
 
 @dataclasses.dataclass
@@ -132,11 +137,19 @@ class FaaSRuntime:
         # eviction returns every borrowed slot/page (see ``evict``)
         self._pools: dict[tuple, object] = {}
         # template-baked prompt-prefix KV: one pinned PrefixHandle + one
-        # PrefixIndex per (function, instance), shared by every fork of
-        # the function on that instance and surviving engine eviction
+        # PrefixIndex per (function, instance, event-key) — static
+        # functions share one bake per instance (event-key ()); dynamic
+        # functions bake lazily per event on first fork, since the baked
+        # KV depends on the event's dynamic weights.  Bakes are shared by
+        # every fork on that instance and survive engine eviction
         self._prefix_handles: dict[tuple, object] = {}
         self._prefix_indexes: dict[tuple, PrefixIndex] = {}
         self._baked_events: dict[str, dict] = {}
+        # multi-tenant adapter serving: base functions deployed through
+        # ``deploy_shared_base`` keep ONE resident engine per instance
+        # whose adapter bank serves every function attached to them
+        self._shared_bases: dict[str, dict] = {}
+        self._adapter_fns: dict[str, tuple] = {}
         # the async front door: submit() tickets route through this loop;
         # the legacy tuple APIs are thin compat shims over it
         self.gateway = InvocationGateway(self, quantum=gateway_quantum,
@@ -280,17 +293,32 @@ class FaaSRuntime:
             self.workers.prewarm_for_functions(self._fn_keys)
 
     # ------------------------------------------------------------------
+    def _prefix_key(self, fn_name: str, inst: _Instance,
+                    event: Optional[dict]) -> tuple:
+        """Bake identity: static functions share one bake per instance
+        (their params never depend on the event); dynamic functions bake
+        per event, because the event's dynamic weights change the
+        template's KV."""
+        fn = self.functions[fn_name]
+        ekey = () if fn.static else tuple(sorted(dict(event or {}).items()))
+        return (fn_name, inst.idx, ekey)
+
     def _bake_template_prefix(self, fn_name: str, inst: _Instance,
-                              params_fn=None) -> None:
+                              params_fn=None,
+                              event: Optional[dict] = None) -> None:
         """Prefill the function's template prompt once and pin its KV
         pages in the instance's shared arena (refcount 1 held by the
         handle), registering the prefix for admission-time matching.
 
         ``params_fn`` lazily supplies already-forked params (the engine
-        being built on the serve path) so a lazy per-instance bake does
-        not stream the whole model a second time; without it — the
-        deploy-time prewarm — the bake forks its own session."""
-        key = (fn_name, inst.idx)
+        being built on the serve path) so a lazy per-(function, event)
+        bake does not stream the whole model a second time; without it —
+        the deploy-time prewarm — the bake forks its own session."""
+        if fn_name not in self._baked_events:
+            return
+        if event is None:
+            event = self._baked_events[fn_name]
+        key = self._prefix_key(fn_name, inst, event)
         if key in self._prefix_handles:
             return
         prompt = self.server.template_prompts.get(fn_name)
@@ -301,8 +329,7 @@ class FaaSRuntime:
         if params_fn is not None:
             params = params_fn()
         else:
-            session, _ = self.server.fork(fn_name,
-                                          self._baked_events[fn_name],
+            session, _ = self.server.fork(fn_name, dict(event),
                                           plan=inst.plan)
             params = session.params()
             if inst.plan is not None:
@@ -327,19 +354,16 @@ class FaaSRuntime:
         """The prefix index an engine of (function, event) may consult.
 
         Baked KV is params-specific: engines of a *static* function all
-        share the baked prefix; a dynamic function's engines reuse it only
-        for the event it was baked with (other events carry different
-        dynamic weights, whose prefix KV would differ)."""
+        share one bake; a DYNAMIC function bakes lazily per (event,
+        instance) on the first fork of that event — reusing the fork's
+        own params via ``params_fn`` — so every engine serves its
+        template suffix-only, not just the deploy-time example event."""
         if fn_name not in self._baked_events:
             return None
-        fn = self.functions[fn_name]
-        if not (fn.static
-                or dict(event or {}) == self._baked_events[fn_name]):
-            # check BEFORE baking: an engine that cannot use the prefix
-            # must not trigger a fork+prefill or pin pages on its instance
-            return None
-        self._bake_template_prefix(fn_name, inst, params_fn=params_fn)
-        return self._prefix_indexes.get((fn_name, inst.idx))
+        self._bake_template_prefix(fn_name, inst, params_fn=params_fn,
+                                   event=event)
+        return self._prefix_indexes.get(
+            self._prefix_key(fn_name, inst, event))
 
     def release_template_prefix(self, fn_name: str) -> int:
         """Unpin the function's baked prefix pages on every instance (they
@@ -468,22 +492,120 @@ class FaaSRuntime:
         return keys
 
     # ------------------------------------------------------------------
+    # multi-tenant adapter serving: many functions, one resident engine
+    # ------------------------------------------------------------------
+    def deploy_shared_base(self, fn: LLMFunction, n_adapters: int = 8,
+                           rank: int = 4,
+                           target_paths: tuple = ("blocks.attn.wq",),
+                           example_event: Optional[dict] = None,
+                           prewarm_seq: int = 32) -> None:
+        """Deploy ``fn`` as a SHARED BASE: one resident engine per
+        instance carries an adapter bank of ``n_adapters - 1`` loadable
+        rows (row 0 is the null adapter), and every function attached via
+        :meth:`attach_adapter` serves from that engine's decode batch —
+        thousands of dynamic functions, one copy of the base weights.
+        The bank targets the attention projections in ``target_paths``."""
+        check_bank_config(fn.model, target_paths, n_adapters)
+        if not fn.model.supports_paged_kv:
+            raise ValueError(
+                f"{fn.name}: shared-base serving needs the paged arena")
+        self.deploy(fn, example_event, prewarm_seq=prewarm_seq)
+        self._shared_bases[fn.name] = {
+            "n_adapters": int(n_adapters), "rank": int(rank),
+            "targets": tuple(target_paths)}
+
+    def attach_adapter(self, fn_name: str, base_name: str, adapter,
+                       alpha: float = 1.0) -> None:
+        """Register ``fn_name`` as an adapter function over ``base_name``.
+
+        ``adapter`` is a ``lora_checkpoint``-layout Checkpoint; its
+        factors load lazily into the shared engine's bank on the
+        function's first invocation (per instance).  The function shows
+        up in ``functions`` like any other deployment, but invoking it
+        routes to the base's co-resident engine with its bank row as the
+        per-slot adapter id."""
+        if base_name not in self._shared_bases:
+            raise KeyError(
+                f"{base_name!r} is not a shared base (deploy_shared_base)")
+        if fn_name in self._shared_bases:
+            raise ValueError(f"{fn_name!r} already names a shared base")
+        base = self.functions[base_name]
+        self.functions[fn_name] = dataclasses.replace(base, name=fn_name)
+        self._adapter_fns[fn_name] = (base_name, adapter, float(alpha))
+
+    def _shared_engine_for(self, fn_name: str, now: float) -> tuple:
+        """Resolve an adapter function to its base's resident engine,
+        creating the engine (bank and all) on first use and loading the
+        function's factors into a free bank row on its first invocation."""
+        base_name, adapter, alpha = self._adapter_fns[fn_name]
+        cfg = self._shared_bases[base_name]
+        inst = self._pick_instance(base_name)
+        key = ("__adapters__", base_name, inst.idx)
+        warm = self._engines.get(key)
+        stats = None
+        if warm is None:
+            kind = "fork" if base_name in self._invoked else "cold"
+            model = self.functions[base_name].model
+            session, stats = self.server.fork(base_name, {}, plan=inst.plan)
+            bank = make_adapter_bank(model, cfg["targets"],
+                                     cfg["n_adapters"], cfg["rank"])
+            engine = ContinuousBatchingEngine(
+                model, session, max_len=self.max_len,
+                page_size=self.page_size, plan=inst.plan,
+                pool=self._pool_for(inst, model),
+                bucket_suffix=True, chunk_tokens=self.chunk_tokens,
+                adapter_bank=bank,
+                owner_name=f"adapters:{base_name}@{inst.idx}")
+            # no prefix index: baked template KV is adapter-specific, and
+            # this engine's batch mixes adapters
+            warm = _WarmEngine(engine, now, inst.idx)
+            self._engines[key] = warm
+            self._invoked.add(base_name)
+        else:
+            kind = "warm"
+        aid = warm.adapter_ids.get(fn_name)
+        if aid is None:
+            n = cfg["n_adapters"]
+            if warm.next_adapter_id >= n:
+                raise RuntimeError(
+                    f"{base_name}: adapter bank is full "
+                    f"({n - 1} rows, row 0 reserved for the null adapter)")
+            aid = warm.next_adapter_id
+            warm.next_adapter_id += 1
+            warm.engine.set_adapter(aid, adapter, alpha=alpha)
+            warm.adapter_ids[fn_name] = aid
+            if kind == "warm":
+                kind = "fork"        # first hit pays the factor load
+        self._invoked.add(fn_name)
+        return key, warm.engine, kind, stats
+
+    def _adapter_id_for(self, fn_name: str, engine_key: tuple) -> int:
+        """The bank row a request of ``fn_name`` decodes under (0 — the
+        null adapter — for every non-adapter function)."""
+        if fn_name not in self._adapter_fns:
+            return 0
+        return self._engines[engine_key].adapter_ids[fn_name]
+
+    # ------------------------------------------------------------------
     def warm_engines(self) -> list:
         return sorted(self._engines)
 
     def _drop_engine(self, key: tuple) -> None:
         """Remove one warm engine, returning every slot/page it still holds
         to the instance's shared KV pool (the arena outlives the engine —
-        dropping without releasing would leak it)."""
+        dropping without releasing would leak it) and retiring its
+        slot-partition lease on the paged arena, so a co-tenant's pool
+        drops the evicted engine's masked page table too."""
         w = self._engines.pop(key)
-        w.engine.release_all()
+        w.engine.close()
 
     def evict(self, fn_name: Optional[str] = None) -> int:
         """Drop warm engines (all of ``fn_name``'s, or every one), returning
         their KV slots/pages to the shared pools.  The next invocation takes
         the fork path again — i.e. keep-alive expiry."""
         keys = [k for k in self._engines
-                if fn_name is None or k[0] == fn_name]
+                if fn_name is None or k[0] == fn_name
+                or (k[0] == "__adapters__" and k[1] == fn_name)]
         for k in keys:
             self._drop_engine(k)
         return len(keys)
@@ -534,6 +656,8 @@ class FaaSRuntime:
         forking a new engine when no warm one exists."""
         if fn_name not in self.functions:
             raise KeyError(f"function {fn_name!r} is not deployed")
+        if fn_name in self._adapter_fns:
+            return self._shared_engine_for(fn_name, now)
         key = _engine_key(fn_name, event or {})
         warm = self._engines.get(key)
         if warm is not None:
@@ -561,6 +685,13 @@ class FaaSRuntime:
         self._engines[key] = _WarmEngine(engine, now, inst.idx)
         self._invoked.add(fn_name)
         return key, engine, kind, stats
+
+    def observe_ttft(self, fn_name: str, ttft_s: float) -> None:
+        """Route Eq. 1 TTFT feedback to the template server.  Adapter
+        functions credit their BASE's template — the resident artifact
+        whose keep-warm decision the feedback drives."""
+        name = self._adapter_fns.get(fn_name, (fn_name,))[0]
+        self.server.observe_ttft(name, ttft_s)
 
     def _validate(self, fn_name: str, prompt, max_new_tokens: int) -> None:
         """Reject what could never serve before it touches any engine."""

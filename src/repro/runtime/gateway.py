@@ -16,19 +16,24 @@ Request lifecycle::
        │ deadline   └── cancel ──┴──> cancelled
        └──────────> shed   (typed DeadlineExceeded, no prefill spent)
 
-Scheduling respects the EXCLUSIVE-ARENA rule: a batched decode touches
-every slot of a shared KV pool, so an engine holding active slots owns its
-arena outright.  At a quantum boundary the engine yields *control* —
-releasing nothing: its slots, pages and queue ride through — and the
-gateway hands the next quantum to an engine on a *different* arena.
-Engines sharing one arena serialize at request granularity (the owner
-keeps stepping until its active set drains); engines on disjoint arenas
-(different models, different mesh instances) genuinely interleave.
+Scheduling is PARTITION-LEASE aware.  Engines on a shared PAGED arena
+each hold a slot-partition lease (``PagedKVCachePool.register_owner``)
+and decode under an owner-masked page table, so co-resident engines of
+one base model interleave at quantum granularity — the old
+exclusive-arena rule is gone for them.  Only DENSE-pool engines still
+serialize at request granularity (a dense batched decode advances every
+slot's recurrent state; no masked view protects a co-tenant).  At a
+quantum boundary an engine yields *control* — releasing nothing: its
+slots, pages and queue ride through.
 
-Everything is cooperative and single-threaded: ``tokens()`` / ``result()``
-pump the gateway while they wait, so no thread ever races the JAX runtime.
-Greedy results are bit-identical to the drain-to-completion path — the
-per-slot position vectors make each request's decode independent of batch
+By default everything is cooperative and single-threaded: ``tokens()`` /
+``result()`` pump the gateway while they wait, so no thread ever races
+the JAX runtime.  ``start_pump()`` moves the scheduling loop onto one
+daemon thread — invocations then progress between consumer polls, and
+``tokens()`` / ``result()`` become passive waiters on a condition
+variable (the pump thread stays the ONLY thread stepping JAX).  Greedy
+results are bit-identical to the drain-to-completion path — the per-slot
+position vectors make each request's decode independent of batch
 composition — which is what lets ``submit``/``submit_many`` stay thin
 compat shims over this gateway.
 """
@@ -36,6 +41,7 @@ compat shims over this gateway.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Optional
 
@@ -204,7 +210,7 @@ class InvocationHandle:
             self._state = STREAMING
             # Eq. 1 TTFT feedback fires on token 0, not at batch drain:
             # residency adapts while the request is still decoding
-            self._gateway.runtime.server.observe_ttft(
+            self._gateway.runtime.observe_ttft(
                 self.request.fn_name, time.perf_counter() - self.submit_s)
         self._tokens.append(int(token))
 
@@ -245,6 +251,13 @@ class InvocationGateway:
         self.interleave = interleave
         self._live: list[InvocationHandle] = []
         self._rr = 0                     # round-robin offset over engines
+        # background pump: one daemon thread owns ALL JAX stepping while
+        # it runs; consumers wait on the condition instead of pumping
+        self._lock = threading.RLock()
+        self._wake = threading.Condition(self._lock)
+        self._pump_thread: Optional[threading.Thread] = None
+        self._pump_stop = False
+        self._pump_error: Optional[BaseException] = None
 
     # -- intake ---------------------------------------------------------
     def submit(self, request: InvocationRequest) -> InvocationHandle:
@@ -257,42 +270,47 @@ class InvocationGateway:
         now = (time.perf_counter() if request.arrival_s is None
                else request.arrival_s)
         rt = self.runtime
-        rt._prune(now)
-        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
-        rt._validate(request.fn_name, prompt, request.max_new_tokens)
-        if (request.deadline_s is not None
-                and time.perf_counter() - now > request.deadline_s):
-            # dead on arrival against the request's OWN clock: a replayed
-            # request whose backdated ``arrival_s`` already overran its
-            # deadline (the replay fell behind wall-clock) is shed here,
-            # before forking an engine or spending any prefill — the shed
-            # decision honors the intended arrival, not the submit call
-            handle = InvocationHandle(self, request, -1, None, None,
-                                      "shed", None)
-            handle.submit_s = now
-            handle._state = SHED
+        with self._wake:
+            rt._prune(now)
+            prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+            rt._validate(request.fn_name, prompt, request.max_new_tokens)
+            if (request.deadline_s is not None
+                    and time.perf_counter() - now > request.deadline_s):
+                # dead on arrival against the request's OWN clock: a
+                # replayed request whose backdated ``arrival_s`` already
+                # overran its deadline (the replay fell behind wall-clock)
+                # is shed here, before forking an engine or spending any
+                # prefill — the shed decision honors the intended arrival,
+                # not the submit call
+                handle = InvocationHandle(self, request, -1, None, None,
+                                          "shed", None)
+                handle.submit_s = now
+                handle._state = SHED
+                return handle
+            key, engine, kind, stats = rt._engine_for(request.fn_name,
+                                                      request.event, now)
+            handle = InvocationHandle(self, request, -1, key, engine, kind,
+                                      stats)
+            handle.submit_s = now        # TTFT includes the fork above
+            handle.req_id = engine.submit(
+                prompt, request.max_new_tokens, submit_s=now,
+                temperature=request.temperature, top_p=request.top_p,
+                seed=request.seed, deadline_s=request.deadline_s,
+                priority=request.priority, token_cb=handle._on_token,
+                adapter_id=rt._adapter_id_for(request.fn_name, key))
+            self._live.append(handle)
+            self._wake.notify_all()      # background pump: new work landed
             return handle
-        key, engine, kind, stats = rt._engine_for(request.fn_name,
-                                                  request.event, now)
-        handle = InvocationHandle(self, request, -1, key, engine, kind,
-                                  stats)
-        handle.submit_s = now            # TTFT includes the fork above
-        handle.req_id = engine.submit(
-            prompt, request.max_new_tokens, submit_s=now,
-            temperature=request.temperature, top_p=request.top_p,
-            seed=request.seed, deadline_s=request.deadline_s,
-            priority=request.priority, token_cb=handle._on_token)
-        self._live.append(handle)
-        return handle
 
     def cancel(self, handle: InvocationHandle) -> bool:
         """Cancel the handle's request; False if already terminal."""
-        if handle.done:
+        with self._wake:
+            if handle.done:
+                return False
+            if handle.engine.cancel(handle.req_id):
+                self._collect(handle.engine)
+                return True
             return False
-        if handle.engine.cancel(handle.req_id):
-            self._collect(handle.engine)
-            return True
-        return False
 
     # -- scheduling -----------------------------------------------------
     def pump(self, wait_for: Optional[InvocationHandle] = None,
@@ -305,6 +323,27 @@ class InvocationGateway:
         when ``timeout`` elapsed first.
         """
         t_end = None if timeout is None else time.perf_counter() + timeout
+        if self._pump_thread is not None and self._pump_thread.is_alive():
+            # passive mode: the daemon pump thread drives the engines —
+            # wait on the condition; this thread never steps JAX
+            with self._wake:
+                while True:
+                    if self._pump_error is not None:
+                        err, self._pump_error = self._pump_error, None
+                        raise err
+                    if wait_for is not None and wait_for.done:
+                        return True
+                    if until is not None and until():
+                        return True
+                    if not any(not h.done for h in self._live):
+                        return wait_for is None or wait_for.done
+                    if t_end is None:
+                        self._wake.wait(0.05)
+                    else:
+                        left = t_end - time.perf_counter()
+                        if left <= 0:
+                            return wait_for is None or wait_for.done
+                        self._wake.wait(min(left, 0.05))
         while True:
             if wait_for is not None and wait_for.done:
                 return True
@@ -315,7 +354,51 @@ class InvocationGateway:
                 return wait_for is None or wait_for.done
             if t_end is not None and time.perf_counter() >= t_end:
                 return wait_for is None or wait_for.done
-            self._round()
+            with self._lock:
+                self._round()
+
+    # -- background pump ------------------------------------------------
+    def start_pump(self) -> None:
+        """Move the scheduling loop onto a daemon thread.
+
+        While the pump runs, ``tokens()`` / ``result()`` wait passively —
+        invocations progress between consumer polls — and the pump thread
+        is the ONLY thread stepping JAX (submit/cancel serialize against
+        it on the gateway lock).  Idempotent."""
+        with self._lock:
+            if self._pump_thread is not None and self._pump_thread.is_alive():
+                return
+            self._pump_stop = False
+            self._pump_error = None
+            self._pump_thread = threading.Thread(
+                target=self._pump_loop, name="gateway-pump", daemon=True)
+            self._pump_thread.start()
+
+    def stop_pump(self) -> None:
+        """Stop the pump thread (joining it); cooperative pumping resumes."""
+        t = self._pump_thread
+        if t is None:
+            return
+        with self._wake:
+            self._pump_stop = True
+            self._wake.notify_all()
+        t.join()
+        self._pump_thread = None
+
+    def _pump_loop(self) -> None:
+        while True:
+            with self._wake:
+                if self._pump_stop:
+                    return
+                self._live = [h for h in self._live if not h.done]
+                if not self._live:
+                    self._wake.wait(0.02)
+                    continue
+                try:
+                    self._round()
+                except BaseException as e:   # surfaced by the next pump()
+                    self._pump_error = e
+                self._wake.notify_all()
 
     def drain(self) -> None:
         """Pump until no live invocation remains."""
@@ -358,10 +441,17 @@ class InvocationGateway:
         return out
 
     def _pool_owner(self, pool, engines: list):
-        """Find the engine holding active slots in ``pool``.
+        """Find the engine holding active slots in a DENSE ``pool``.
 
-        Exclusive-arena rule: only that engine may decode there.
+        Dense-pool engines still borrow the arena exclusively (a dense
+        batched decode advances every slot's recurrent state), so only
+        the returned engine may decode there.  PAGED pools have no single
+        owner — every co-resident engine holds a slot-partition lease and
+        decodes under its own masked page table — so this returns None
+        and the rotation interleaves them freely.
         """
+        if hasattr(pool, "register_owner"):
+            return None                  # paged arena: partition leases
         cands = {id(e): e for e in engines}
         for w in self.runtime._engines.values():
             cands.setdefault(id(w.engine), w.engine)

@@ -33,6 +33,18 @@ decode phase keeps the deadlock-free invariant above).  A long prompt
 therefore no longer locks its whole page span at admission time — short
 requests admit alongside it out of the same arena.
 
+Multi-tenancy (slot partitions): the paged arena is shared by SEVERAL
+engines at once.  Each engine registers an OWNER token
+(:meth:`PagedKVCachePool.register_owner`) and allocates its slots under
+that token; every mutating slot operation is owner-checked, so a
+misbehaving engine writing outside its partition raises loudly instead of
+corrupting a co-tenant's KV.  ``device_page_table(owner)`` returns a
+per-owner MASKED view of the page table — rows of slots held by other
+owners read as all-NULL — which is what makes the batched decode step
+slot-masked: foreign slots behave exactly like free slots (null-page
+dummies), compiled shapes never change, and co-resident engines interleave
+at quantum granularity instead of borrowing the arena exclusively.
+
 Prefix sharing (copy-on-write): every page carries a REFCOUNT.  A
 :class:`PrefixHandle` pins a span of already-filled prompt-prefix pages
 (TIDAL's template-baked warm state, at the KV level); ``alloc(...,
@@ -241,6 +253,15 @@ class PagedKVCachePool:
         # prefix sharing: per-page refcount (0 = free / never allocated;
         # exclusively-owned pages sit at 1, shared prefix pages higher)
         self._page_refs = np.zeros(n_pages, np.int32)
+        # multi-tenancy: owner tokens partition the slot space.  A slot
+        # allocated under an owner is invisible (all-NULL page-table row)
+        # to every other owner's device view, and mutating it under the
+        # wrong owner raises.
+        self._next_owner = 0
+        self._owners: dict[int, Optional[str]] = {}
+        self._slot_owner: dict[int, int] = {}
+        self._owner_pts: dict[int, Any] = {}
+        self._owner_dirty: dict[int, set] = {}
         # cumulative mapping counters — the benchmark/test surface for
         # "a prefix hit maps strictly fewer fresh pages per request"
         self.stats = {"fresh_pages_mapped": 0, "shared_pages_mapped": 0,
@@ -282,11 +303,85 @@ class PagedKVCachePool:
         fresh = self.blocks_for(n_tokens_total) - reuse_len // self.page_size
         return bool(self._free_slots) and fresh <= self.n_available_pages
 
+    # ---- slot partitions (multi-tenancy) ----------------------------------
+    def register_owner(self, name: Optional[str] = None) -> int:
+        """Mint an owner token partitioning the slot space.
+
+        Engines sharing this arena each hold a token; slots allocate
+        under it, and :meth:`device_page_table` with the token masks out
+        every other owner's rows so a batched decode only sees (and
+        therefore only reads/writes) the caller's own partition.
+        """
+        self._next_owner += 1
+        token = self._next_owner
+        self._owners[token] = name
+        self._owner_dirty[token] = set()
+        return token
+
+    def release_owner(self, owner: int) -> None:
+        """Drop an owner token, releasing any slots it still holds.
+
+        Co-tenants' slots, page refcounts and device views are untouched
+        — evicting one tenant returns exactly its own pages.
+        """
+        if owner not in self._owners:
+            raise ValueError(f"unknown owner token {owner}")
+        for slot in [s for s, o in self._slot_owner.items() if o == owner]:
+            self.release(slot, owner=owner)
+        del self._owners[owner]
+        self._owner_pts.pop(owner, None)
+        self._owner_dirty.pop(owner, None)
+
+    def slot_owner(self, slot: int) -> Optional[int]:
+        """Owner token holding ``slot`` (None: free or unowned legacy)."""
+        return self._slot_owner.get(slot)
+
+    def owner_slots(self, owner: int) -> list:
+        """Slots currently allocated under ``owner`` (sorted)."""
+        return sorted(s for s, o in self._slot_owner.items() if o == owner)
+
+    def n_foreign_slots(self, owner: Optional[int]) -> int:
+        """Allocated slots NOT held by ``owner`` (co-tenant occupancy)."""
+        n_held = self.n_slots - len(self._free_slots)
+        if owner is None:
+            return n_held - sum(
+                1 for s in range(self.n_slots)
+                if s not in self._free_slot_set
+                and self._slot_owner.get(s) is None)
+        return n_held - len(self.owner_slots(owner))
+
+    def partition_stats(self, owner: int) -> dict:
+        """Resident footprint of one owner's slot partition."""
+        if owner not in self._owners:
+            raise ValueError(f"unknown owner token {owner}")
+        slots = self.owner_slots(owner)
+        mapped = sum(self._mapped[s] for s in slots)
+        budget = sum(self._budget[s] for s in slots)
+        return {"owner": owner, "name": self._owners[owner],
+                "n_slots": len(slots), "mapped_pages": mapped,
+                "reserved_pages": budget - mapped}
+
+    def _check_owner(self, slot: int, owner: Optional[int],
+                     verb: str) -> None:
+        """Raise when ``owner`` tries to touch a slot it does not hold."""
+        if owner is None:
+            return
+        held_by = self._slot_owner.get(slot)
+        if held_by != owner:
+            whose = (f"partition {held_by} "
+                     f"({self._owners.get(held_by)!r})"
+                     if held_by is not None else "no partition")
+            raise PermissionError(
+                f"slot {slot}: owner {owner} "
+                f"({self._owners.get(owner)!r}) may not {verb} a slot "
+                f"held by {whose}")
+
     # ---- alloc / grow / release ------------------------------------------
     def alloc(self, prompt_len: int, max_new_tokens: int,
               shared_prefix: Optional[PrefixHandle] = None,
               reuse_len: int = 0,
-              budget_tokens: Optional[int] = None) -> int:
+              budget_tokens: Optional[int] = None,
+              owner: Optional[int] = None) -> int:
         """Claim a slot and reserve the request's worst-case block count.
 
         With ``shared_prefix``, the first ``reuse_len`` tokens of the
@@ -303,7 +398,13 @@ class PagedKVCachePool:
         prefill: the engine grows the budget via :meth:`extend_budget` as
         chunks land).  The worst case is still validated against the
         arena/slot capacity so an admission can never be unservable.
+
+        ``owner`` files the slot under a partition token from
+        :meth:`register_owner`; later mutations must present the same
+        token, and other owners' device page tables mask this slot out.
         """
+        if owner is not None and owner not in self._owners:
+            raise ValueError(f"unknown owner token {owner}")
         total = self.blocks_for(prompt_len + max_new_tokens)
         if total > self.blocks_per_slot:
             raise ValueError(
@@ -346,6 +447,8 @@ class PagedKVCachePool:
                 f"{self.n_available_pages} available")
         slot = self._free_slots.pop()
         self._free_slot_set.discard(slot)
+        if owner is not None:
+            self._slot_owner[slot] = owner
         mapped = 0
         if n_full:
             # zero-copy aliasing of the page-aligned span
@@ -373,7 +476,8 @@ class PagedKVCachePool:
             self._touch(slot)
         return slot
 
-    def extend_budget(self, slot: int, n_tokens: int) -> bool:
+    def extend_budget(self, slot: int, n_tokens: int,
+                      owner: Optional[int] = None) -> bool:
         """Grow ``slot``'s reserved block budget to cover ``n_tokens``.
 
         Chunked prefill calls this before each chunk, and with the full
@@ -386,6 +490,7 @@ class PagedKVCachePool:
         """
         if slot not in self._budget:
             raise ValueError(f"slot {slot} is not allocated")
+        self._check_owner(slot, owner, "grow the budget of")
         need = self.blocks_for(n_tokens)
         if need > self.blocks_per_slot:
             raise ValueError(
@@ -404,10 +509,12 @@ class PagedKVCachePool:
         """Currently reserved block budget of an allocated slot."""
         return self._budget[slot]
 
-    def ensure_len(self, slot: int, n_tokens: int) -> None:
+    def ensure_len(self, slot: int, n_tokens: int,
+                   owner: Optional[int] = None) -> None:
         """Map pages so positions ``0 .. n_tokens-1`` are backed."""
         if slot not in self._budget:
             raise ValueError(f"slot {slot} is not allocated")
+        self._check_owner(slot, owner, "map pages into")
         need = self.blocks_for(n_tokens)
         if need > self._budget[slot]:
             raise ValueError(
@@ -437,15 +544,18 @@ class PagedKVCachePool:
         elif self._page_refs[page] < 0:
             raise AssertionError(f"page {page} refcount went negative")
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int, owner: Optional[int] = None) -> None:
         """Retire ``slot``: unref its mapped pages and free the slot.
 
         Aliased prefix pages merely drop one reference; pages return to
         the free list only at refcount 0, so a donor prefix (or another
         borrower) is never freed out from under its remaining users.
+        With ``owner``, releasing a co-tenant's slot raises.
         """
         if slot in self._free_slot_set or not (0 <= slot < self.n_slots):
             raise ValueError(f"bad slot release: {slot}")
+        self._check_owner(slot, owner, "release")
+        self._slot_owner.pop(slot, None)
         mapped = self._mapped.pop(slot)
         budget = self._budget.pop(slot)
         for p in self.page_table[slot, :mapped]:
@@ -531,7 +641,8 @@ class PagedKVCachePool:
             new[skey] = self.cache[skey].at[:, pages].set(s)
         self.cache = new
 
-    def write_prompt(self, slot: int, sub_cache: Any, n_tokens: int) -> None:
+    def write_prompt(self, slot: int, sub_cache: Any, n_tokens: int,
+                     owner: Optional[int] = None) -> None:
         """Write a prefilled prompt into ``slot``'s pages (allocating them).
 
         ``sub_cache`` is a batch-1 dense fp cache whose leaves are
@@ -539,10 +650,10 @@ class PagedKVCachePool:
         ``n_tokens`` — only the occupied pages are written (and quantized,
         in int8 mode).
         """
-        self.write_suffix(slot, sub_cache, 0, n_tokens)
+        self.write_suffix(slot, sub_cache, 0, n_tokens, owner=owner)
 
     def write_suffix(self, slot: int, sub_cache: Any, start_token: int,
-                     n_tokens: int) -> None:
+                     n_tokens: int, owner: Optional[int] = None) -> None:
         """Write positions ``start_token .. n_tokens-1`` into ``slot``.
 
         Maps any still-missing pages, then writes whole blocks from
@@ -552,7 +663,8 @@ class PagedKVCachePool:
         Quantized mode re-quantizes the rewritten first block from its
         dequantized values, which is bit-exact (see ``repro.models.quant``).
         """
-        self.ensure_len(slot, n_tokens)
+        self._check_owner(slot, owner, "write KV into")
+        self.ensure_len(slot, n_tokens, owner=owner)
         first = start_token // self.page_size
         nb = self.blocks_for(n_tokens)
         if first >= nb:
@@ -605,28 +717,67 @@ class PagedKVCachePool:
     # ---- device page table (dirty-row sync) -------------------------------
     def _touch(self, slot: int) -> None:
         self._dirty_rows.add(slot)
+        for dirty in self._owner_dirty.values():
+            dirty.add(slot)
 
-    def device_page_table(self):
+    def _masked_rows(self, owner: int, rows) -> np.ndarray:
+        """Host page-table rows with co-tenants' slots forced to NULL.
+
+        A foreign slot's masked row is indistinguishable from a free
+        slot's, so the owner's batched decode treats it as a null-page
+        dummy — its writes scribble on the null page, its reads are
+        position-masked, and the co-tenant's pages are unreachable.
+        """
+        out = np.zeros((len(rows), self.blocks_per_slot), np.int32)
+        for i, slot in enumerate(rows):
+            if self._slot_owner.get(slot) == owner:
+                out[i] = self.page_table[slot]
+        return out
+
+    def device_page_table(self, owner: Optional[int] = None):
         """Return the page table as a device-resident array.
 
         Only rows that changed since the last call re-upload
         (admit/grow/retire touch a few rows; steady-state decode uploads
-        nothing).
+        nothing).  With ``owner``, the returned table is that partition's
+        MASKED view: rows of slots held by any other owner are all-NULL,
+        so a batched decode under this table cannot read or write a
+        co-tenant's pages.  Shapes are identical across owners (and to
+        the unmasked view), keeping compiled executables shared.
         """
-        if self._device_pt is None:
-            if self.plan is not None:
-                pt = jax.device_put(self.page_table, self.plan.replicated)
-            else:
-                pt = jnp.asarray(self.page_table)
-            self._device_pt = pt
-            self._dirty_rows.clear()
-        elif self._dirty_rows:
-            rows = sorted(self._dirty_rows)
-            idx = jnp.asarray(rows, jnp.int32)
-            self._device_pt = self._device_pt.at[idx].set(
-                jnp.asarray(self.page_table[rows]))
-            self._dirty_rows.clear()
-        return self._device_pt
+        if owner is None:
+            if self._device_pt is None:
+                self._device_pt = self._upload_full(self.page_table)
+                self._dirty_rows.clear()
+            elif self._dirty_rows:
+                rows = sorted(self._dirty_rows)
+                self._device_pt = self._upload_rows(
+                    self._device_pt, rows, self.page_table[rows])
+                self._dirty_rows.clear()
+            return self._device_pt
+        if owner not in self._owners:
+            raise ValueError(f"unknown owner token {owner}")
+        dirty = self._owner_dirty[owner]
+        if owner not in self._owner_pts:
+            self._owner_pts[owner] = self._upload_full(
+                self._masked_rows(owner, range(self.n_slots)))
+            dirty.clear()
+        elif dirty:
+            rows = sorted(dirty)
+            self._owner_pts[owner] = self._upload_rows(
+                self._owner_pts[owner], rows,
+                self._masked_rows(owner, rows))
+            dirty.clear()
+        return self._owner_pts[owner]
+
+    def _upload_full(self, table: np.ndarray):
+        if self.plan is not None:
+            return jax.device_put(table, self.plan.replicated)
+        return jnp.asarray(table)
+
+    def _upload_rows(self, device_pt, rows, host_rows):
+        idx = jnp.asarray(rows, jnp.int32)
+        return device_pt.at[idx].set(jnp.asarray(host_rows))
 
     # ---- footprint --------------------------------------------------------
     @property

@@ -117,7 +117,7 @@ def test_cancel_returns_all_pages_incl_pinned_prefix_borrower():
                      prewarm=False)
     rt.deploy(tidal.static_function("fn", m, params), {},
               template_prompt=template)
-    handle = rt._prefix_handles[("fn", 0)]
+    handle = rt._prefix_handles[("fn", 0, ())]
     pool = next(iter(rt._pools.values()))
     baseline = rt.kv_pool_stats()
 

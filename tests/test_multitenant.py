@@ -1,0 +1,299 @@
+"""Slot-partitioned multi-tenancy on ONE paged arena.
+
+The exclusive-arena rule is gone: co-resident engines hold partition
+leases (owner tokens) on a shared PagedKVCachePool and decode under
+owner-masked page-table views.  This module pins down the isolation
+contract at the pool layer (foreign-slot writes raise, masked views
+hide co-tenants), the serving layer (N co-resident functions emit
+bit-identical tokens to single-tenant engines; cancelling/evicting one
+tenant returns exactly its pages), the per-slot adapter gather against
+merged-weight oracles, and the background gateway pump."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api as tidal
+from repro.models.registry import get_smoke_model
+from repro.runtime.engine import Engine
+from repro.runtime.faas import FaaSRuntime
+from repro.runtime.gateway import InvocationRequest
+from repro.runtime.kv_pool import PagedKVCachePool
+
+MAX_LEN = 32
+
+
+def _model(n_layers=2):
+    return get_smoke_model("smollm-135m", n_layers=n_layers)
+
+
+def _want(m, params, prompt, n):
+    eng = Engine(m, params, donate_cache=False)
+    return eng.generate(prompt[None], max_new_tokens=n,
+                        cache_len=MAX_LEN).tokens[0]
+
+
+def _live_owners(pool):
+    return {pool.slot_owner(s) for s in range(pool.n_slots)} - {None}
+
+
+# ---------------------------------------------------------------------------
+# pool-layer isolation
+# ---------------------------------------------------------------------------
+
+def test_foreign_slot_mutation_raises():
+    """Every mutating pool verb carries the caller's owner token; touching
+    a slot held by another partition raises loudly (naming both tenants),
+    and the pool state is untouched by the failed attempt."""
+    m = _model()
+    pool = PagedKVCachePool(m, n_slots=4, max_len=MAX_LEN, page_size=4)
+    a = pool.register_owner("tenant-a")
+    b = pool.register_owner("tenant-b")
+    slot = pool.alloc(6, 4, owner=a)
+    pool.ensure_len(slot, 6, owner=a)
+    before = (pool.n_free_pages, pool.page_table.copy(),
+              dict(pool.partition_stats(a)))
+
+    cache = m.make_cache(1, pool.padded_len)
+    with pytest.raises(PermissionError, match="tenant-a"):
+        pool.write_prompt(slot, cache, 6, owner=b)
+    with pytest.raises(PermissionError, match="tenant-b.*tenant-a"):
+        pool.release(slot, owner=b)
+    with pytest.raises(PermissionError):
+        pool.extend_budget(slot, 12, owner=b)
+    with pytest.raises(PermissionError):
+        pool.ensure_len(slot, 8, owner=b)
+    assert pool.n_free_pages == before[0]
+    np.testing.assert_array_equal(pool.page_table, before[1])
+    assert pool.partition_stats(a) == before[2]
+
+    # the legitimate owner still holds full rights over its own slot
+    pool.extend_budget(slot, 10, owner=a)
+    pool.ensure_len(slot, 10, owner=a)
+    pool.release(slot, owner=a)
+    assert pool.owner_slots(a) == []
+
+
+def test_masked_page_table_hides_foreign_rows():
+    """Each partition's device view NULL-masks co-tenants' rows — same
+    shape as the unmasked table (compiled executables stay shared) — and
+    the dirty-row sync keeps every view coherent across release."""
+    m = _model()
+    pool = PagedKVCachePool(m, n_slots=3, max_len=MAX_LEN, page_size=4)
+    a = pool.register_owner("tenant-a")
+    b = pool.register_owner("tenant-b")
+    sa = pool.alloc(8, 4, owner=a)
+    sb = pool.alloc(8, 4, owner=b)
+    pool.ensure_len(sa, 8, owner=a)
+    pool.ensure_len(sb, 8, owner=b)
+
+    full = np.asarray(pool.device_page_table())
+    va = np.asarray(pool.device_page_table(a))
+    vb = np.asarray(pool.device_page_table(b))
+    assert full.shape == va.shape == vb.shape
+    np.testing.assert_array_equal(va[sa], full[sa])
+    np.testing.assert_array_equal(vb[sb], full[sb])
+    assert va[sa].max() > 0 and vb[sb].max() > 0
+    # the foreign row is indistinguishable from a free slot's
+    assert va[sb].max() == pool.NULL_PAGE
+    assert vb[sa].max() == pool.NULL_PAGE
+    assert pool.n_foreign_slots(a) == 1 and pool.n_foreign_slots(b) == 1
+
+    pool.release(sb, owner=b)
+    va2 = np.asarray(pool.device_page_table(a))
+    np.testing.assert_array_equal(va2[sa], full[sa])   # a's row survives
+    assert np.asarray(pool.device_page_table(b)).max() == pool.NULL_PAGE
+
+
+# ---------------------------------------------------------------------------
+# co-resident serving
+# ---------------------------------------------------------------------------
+
+def test_coresident_engines_bit_identical_to_single_tenant():
+    """Three functions of one model share ONE arena (one pool, three
+    partition leases), genuinely interleave mid-flight, and every
+    function's greedy tokens are bit-identical to its own single-tenant
+    sequential engine."""
+    m = _model()
+    params = [m.init_params(jax.random.PRNGKey(i)) for i in range(3)]
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, m.cfg.vocab_size, 6 + i).astype(np.int32)
+               for i in range(3)]
+    want = [_want(m, p, pr, 6) for p, pr in zip(params, prompts)]
+
+    rt = FaaSRuntime(n_slots=3, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    for i in range(3):
+        rt.deploy(tidal.static_function(f"fn-{i}", m, params[i]), {})
+    assert len(rt._pools) == 0                 # pools build lazily
+    handles = [rt.submit(InvocationRequest(f"fn-{i}", prompts[i],
+                                           max_new_tokens=6))
+               for i in range(3)]
+    for h in handles:
+        next(h.tokens())                       # all three admitted
+    assert len(rt._pools) == 1                 # ONE arena for the trio
+    pool = next(iter(rt._pools.values()))
+    owners = _live_owners(pool)
+    assert len(owners) == 3                    # distinct leases, co-resident
+    assert all(pool.n_foreign_slots(o) == 2 for o in owners)
+    for h, w in zip(handles, want):
+        np.testing.assert_array_equal(h.result().tokens, w)
+    assert all(v["n_free_slots"] == 3 for v in rt.kv_pool_stats().values())
+
+
+def test_cancel_one_tenant_returns_exactly_its_pages():
+    """Cancelling one tenant's mid-stream borrower of a pinned prefix
+    returns exactly its partition's pages — aliased prefix pages drop
+    back to the pin's refcount 1 — while the co-tenant's partition stats
+    never move and its request completes bit-identically."""
+    m = _model()
+    pa = m.init_params(jax.random.PRNGKey(0))
+    pb = m.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    template = rng.integers(0, m.cfg.vocab_size, 12).astype(np.int32)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn-a", m, pa), {},
+              template_prompt=template)
+    rt.deploy(tidal.static_function("fn-b", m, pb), {})
+    handle = rt._prefix_handles[("fn-a", 0, ())]
+    pool = next(iter(rt._pools.values()))
+    baseline = rt.kv_pool_stats()
+
+    borrower = np.concatenate(
+        [template, rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)])
+    other = rng.integers(0, m.cfg.vocab_size, 9).astype(np.int32)
+    want_b = _want(m, pb, other, 4)
+
+    ha = rt.submit(InvocationRequest("fn-a", borrower, max_new_tokens=10))
+    hb = rt.submit(InvocationRequest("fn-b", other, max_new_tokens=4))
+    next(ha.tokens())
+    next(hb.tokens())                          # both tenants mid-stream
+    assert len(_live_owners(pool)) == 2
+    assert pool.prefix_page_refs(handle)[0] == 2   # aliased by the borrower
+    owner_a = rt._engines[("fn-a", ())].engine._owner
+    owner_b = rt._engines[("fn-b", ())].engine._owner
+    stats_b = pool.partition_stats(owner_b)
+
+    assert ha.cancel()
+    assert pool.owner_slots(owner_a) == []     # a's partition emptied
+    assert pool.prefix_page_refs(handle) == [1, 1, 1]   # pin survives
+    assert pool.partition_stats(owner_b) == stats_b     # b untouched
+    np.testing.assert_array_equal(hb.result().tokens, want_b)
+    assert rt.kv_pool_stats() == baseline      # no page leaked anywhere
+
+
+def test_evict_one_tenant_leaves_cotenant_serving():
+    """evict(fn) retires exactly that tenant's partition lease mid-flight:
+    its ticket cancels, its owner token dies, and the co-tenant on the
+    same arena keeps serving to a bit-identical result."""
+    m = _model()
+    pa = m.init_params(jax.random.PRNGKey(0))
+    pb = m.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+    prompt_a = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    prompt_b = rng.integers(0, m.cfg.vocab_size, 7).astype(np.int32)
+    want_b = _want(m, pb, prompt_b, 5)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn-a", m, pa), {})
+    rt.deploy(tidal.static_function("fn-b", m, pb), {})
+
+    ha = rt.submit(InvocationRequest("fn-a", prompt_a, max_new_tokens=10))
+    hb = rt.submit(InvocationRequest("fn-b", prompt_b, max_new_tokens=5))
+    next(ha.tokens())
+    next(hb.tokens())
+    pool = next(iter(rt._pools.values()))
+    owner_a = rt._engines[("fn-a", ())].engine._owner
+    assert len(_live_owners(pool)) == 2
+
+    assert rt.evict("fn-a") == 1
+    with pytest.raises(ValueError, match="unknown owner"):
+        pool.partition_stats(owner_a)          # the lease is retired
+    np.testing.assert_array_equal(hb.result().tokens, want_b)
+    assert ha.status == "cancelled"            # pump retired the orphan
+    assert all(v["n_free_slots"] == 2 for v in rt.kv_pool_stats().values())
+
+
+# ---------------------------------------------------------------------------
+# per-slot adapter gather
+# ---------------------------------------------------------------------------
+
+def _merged(params, adapter, alpha, path="blocks.attn.wq"):
+    A = np.asarray(adapter.arrays[path + ".A"], np.float32)
+    B = np.asarray(adapter.arrays[path + ".B"], np.float32)
+    wq = np.asarray(params["blocks"]["attn"]["wq"])
+    delta = ((A @ B) * alpha).reshape(wq.shape).astype(wq.dtype)
+    return {**params,
+            "blocks": {**params["blocks"],
+                       "attn": {**params["blocks"]["attn"],
+                                "wq": jnp.asarray(wq + delta)}}}
+
+
+def test_adapter_gather_matches_merged_weight_oracles():
+    """A shared-base engine serving the base and two attached adapter
+    functions from ONE decode batch (per-slot adapter-id gather into the
+    bank) emits greedy tokens bit-identical to per-request dense oracles:
+    the raw base engine and one merged-weight engine per adapter."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = FaaSRuntime(n_slots=3, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy_shared_base(tidal.static_function("base", m, params),
+                          n_adapters=4, rank=4,
+                          target_paths=("blocks.attn.wq",))
+    ad1 = tidal.lora_checkpoint("ad1", m, ["blocks.attn.wq"], rank=4, seed=1)
+    ad2 = tidal.lora_checkpoint("ad2", m, ["blocks.attn.wq"], rank=4, seed=2)
+    rt.attach_adapter("fn-1", "base", ad1, alpha=0.7)
+    rt.attach_adapter("fn-2", "base", ad2, alpha=1.3)
+
+    rng = np.random.default_rng(4)
+    prompts = {name: rng.integers(0, m.cfg.vocab_size, 6 + i).astype(np.int32)
+               for i, name in enumerate(("base", "fn-1", "fn-2"))}
+    want = {"base": _want(m, params, prompts["base"], 6),
+            "fn-1": _want(m, _merged(params, ad1, 0.7), prompts["fn-1"], 6),
+            "fn-2": _want(m, _merged(params, ad2, 1.3), prompts["fn-2"], 6)}
+
+    handles = {name: rt.submit(InvocationRequest(name, p, max_new_tokens=6))
+               for name, p in prompts.items()}
+    results = {name: h.result() for name, h in handles.items()}
+    # ONE resident shared engine served both adapter functions from
+    # distinct bank rows (the base's own engine co-resides on the arena)
+    assert ("__adapters__", "base", 0) in rt.warm_engines()
+    assert len(rt._pools) == 1
+    ids = rt._engines[("__adapters__", "base", 0)].adapter_ids
+    assert sorted(ids) == ["fn-1", "fn-2"]
+    assert len(set(ids.values())) == 2 and 0 not in ids.values()
+    for name, res in results.items():
+        np.testing.assert_array_equal(res.tokens, want[name])
+
+
+# ---------------------------------------------------------------------------
+# background pump
+# ---------------------------------------------------------------------------
+
+def test_background_pump_progresses_without_consumer_polls():
+    """With the pump daemon running, a submitted handle completes while
+    the consumer never calls tokens()/result() — then result() returns
+    the bit-identical tokens instantly."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    prompt = np.arange(8, dtype=np.int32) % m.cfg.vocab_size
+    want = _want(m, params, prompt, 6)
+
+    rt.gateway.start_pump()
+    try:
+        h = rt.submit(InvocationRequest("fn", prompt, max_new_tokens=6))
+        deadline = time.monotonic() + 60.0
+        while not h.done and time.monotonic() < deadline:
+            time.sleep(0.02)                   # no tokens()/result() calls
+        assert h.done, "pump thread never completed the invocation"
+    finally:
+        rt.gateway.stop_pump()
+    np.testing.assert_array_equal(h.result().tokens, want)

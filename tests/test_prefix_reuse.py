@@ -409,7 +409,7 @@ def test_faas_template_bake_reuse_and_no_leak():
     rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=PS)
     rt.deploy(tidal.static_function("fn-sys", m, params), {}, prewarm_seq=8,
               template_prompt=template)
-    handle = rt._prefix_handles[("fn-sys", 0)]
+    handle = rt._prefix_handles[("fn-sys", 0, ())]
     pool = next(iter(rt._pools.values()))
     assert pool.prefix_page_refs(handle) == [1, 1, 1]    # pinned once
     baseline = rt.kv_pool_stats()
@@ -442,15 +442,16 @@ def test_faas_template_bake_reuse_and_no_leak():
     new_template = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
     rt.deploy(tidal.static_function("fn-sys", m, params), {}, prewarm_seq=8,
               template_prompt=new_template)
-    handle2 = rt._prefix_handles[("fn-sys", 0)]
+    handle2 = rt._prefix_handles[("fn-sys", 0, ())]
     np.testing.assert_array_equal(handle2.tokens, new_template)
     assert pool.prefix_page_refs(handle2) == [1, 1]
 
 
-def test_faas_dynamic_function_reuses_only_baked_event():
-    """Baked prefix KV is params-specific: a LoRA function's engines reuse
-    it for the event it was baked with, never for other adapters (whose
-    dynamic weights would yield different prefix KV)."""
+def test_faas_dynamic_function_bakes_per_event_prefixes():
+    """Baked prefix KV is params-specific: a LoRA function's engines never
+    share one bake across adapters (their dynamic weights yield different
+    prefix KV).  Instead each event gets its OWN lazy bake on first use —
+    a separate pinned handle and index per (function, instance, event)."""
     m = _model()
     params = m.init_params(jax.random.PRNGKey(0))
     template = np.random.default_rng(3).integers(
@@ -461,10 +462,21 @@ def test_faas_dynamic_function_reuses_only_baked_event():
               {"adapter": "adapter-0"}, prewarm_seq=8,
               template_prompt=template)
     inst = rt.instances[0]
-    assert rt._prefix_index_for("fn-lora", {"adapter": "adapter-0"},
-                                inst) is not None
-    assert rt._prefix_index_for("fn-lora", {"adapter": "adapter-1"},
-                                inst) is None
+    idx0 = rt._prefix_index_for("fn-lora", {"adapter": "adapter-0"}, inst)
+    idx1 = rt._prefix_index_for("fn-lora", {"adapter": "adapter-1"}, inst)
+    assert idx0 is not None and idx1 is not None and idx0 is not idx1
+    h0 = rt._prefix_handles[("fn-lora", 0, (("adapter", "adapter-0"),))]
+    h1 = rt._prefix_handles[("fn-lora", 0, (("adapter", "adapter-1"),))]
+    assert h0 is not h1 and h0.pinned and h1.pinned
+    np.testing.assert_array_equal(h0.tokens, template)
+    np.testing.assert_array_equal(h1.tokens, template)
+    # the baked KV itself differs: adapter-1's dynamic weights produce
+    # different template KV than adapter-0's, so the per-event split is
+    # load-bearing, not bookkeeping
+    assert h0.pages != h1.pages
+    # release drops BOTH events' bakes
+    assert rt.release_template_prefix("fn-lora") == 2
+    assert not rt._prefix_handles
 
 
 def test_faas_template_prompt_validations():

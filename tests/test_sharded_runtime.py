@@ -129,6 +129,36 @@ def test_sharded_streamed_prefill_mid_flight():
         np.testing.assert_array_equal(out[rid].tokens, w)
 
 
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-2.7b"])
+def test_sharded_hybrid_streamed_prefill_no_remat(arch, capfd, recwarn):
+    """Hybrid (recurrent) forks no longer block their first prefill on the
+    full weight stream: block-streamed prefill runs on the mesh and stays
+    token-identical — and the explicit SSM cache shardings keep XLA from
+    emitting involuntary full rematerialization warnings."""
+    m = get_smoke_model(arch)
+    params = m.init_params(jax.random.PRNGKey(5))
+    reqs = _mixed_requests(m.cfg.vocab_size, seed=11, n=2)
+    want = _sequential_tokens(m, params, reqs)
+    plan = _tp_plan()
+    srv = TemplateServer(trace_batch=1, trace_seq=8, plan=plan)
+    srv.register(tidal.static_function("f", m, params), {})
+    session, _ = srv.fork("f", {})
+    cbe = ContinuousBatchingEngine(m, session, n_slots=2, max_len=MAX_LEN,
+                                   plan=plan)
+    assert not cbe.paged
+    rids = [cbe.submit(p, k) for p, k in reqs]
+    out = cbe.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid].tokens, w)
+    # the admissions above really took the streamed path (forked session,
+    # no materialized full param tree)
+    assert all(r.streamed_prefill for r in out.values())
+    err = capfd.readouterr().err.lower()
+    assert "rematerialization" not in err
+    assert not [w for w in recwarn.list
+                if "remat" in str(w.message).lower()]
+
+
 # ---------------------------------------------------------------------------
 # multi-instance FaaSRuntime
 # ---------------------------------------------------------------------------
@@ -264,7 +294,7 @@ def test_faas_mesh_template_prefix_bakes_per_instance(mesh_runtime):
     rt.evict()
     rt.deploy(tidal.static_function("fn-tpl", m, params), {}, prewarm_seq=8,
               template_prompt=template)
-    assert ("fn-tpl", 0) in rt._prefix_handles
+    assert ("fn-tpl", 0, ()) in rt._prefix_handles
     prompt = np.concatenate(
         [template, rng.integers(0, m.cfg.vocab_size, 4).astype(np.int32)])
     want = Engine(m, params, donate_cache=False).generate(
@@ -273,8 +303,8 @@ def test_faas_mesh_template_prefix_bakes_per_instance(mesh_runtime):
     np.testing.assert_array_equal(r.tokens, want)
     inst = {w.instance for k, w in rt._engines.items()
             if k[0] == "fn-tpl"}.pop()
-    assert ("fn-tpl", inst) in rt._prefix_handles        # baked where placed
-    handle = rt._prefix_handles[("fn-tpl", inst)]
+    assert ("fn-tpl", inst, ()) in rt._prefix_handles        # baked where placed
+    handle = rt._prefix_handles[("fn-tpl", inst, ())]
     assert handle.pool.prefix_page_refs(handle) == [1]   # 1 page, pinned once
     rt.evict()
     n_baked = sum(1 for k in rt._prefix_handles if k[0] == "fn-tpl")

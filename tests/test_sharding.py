@@ -89,6 +89,56 @@ def test_long500k_batch1_shards_seq_over_data():
     assert kv[2] == ("data",) or kv[2] == "data"
 
 
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-2.7b"])
+@pytest.mark.parametrize("prefer_seq", [False, True])
+def test_ssm_cache_specs_explicit(arch, prefer_seq):
+    """Recurrent-state leaves carry EXPLICIT shardings (no name-based
+    guessing): the conv window dim is never sharded by any mode (the
+    substring heuristic used to seq-shard it — 'mamba.conv' contains
+    'v'), conv channels and heads go to 'model', and a divisible head
+    axis is never mistaken for a long-context seq axis by 'data'."""
+    from repro.utils import path_str
+    model = get_model(arch)
+    cache = model.make_cache(16, 4096, abstract=True, dtype=jnp.bfloat16)
+    specs = shd.cache_specs(model, cache, MESH1, 16, prefer_seq=prefer_seq)
+    assert shd.validate_specs(specs, cache, MESH1) == []
+    flat = dict(
+        (path_str(p), s) for p, s in jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+    flat_shapes = dict(
+        (path_str(p), tuple(l.shape)) for p, l in
+        jax.tree_util.tree_leaves_with_path(cache))
+    for path, spec in flat.items():
+        if not path.startswith(("mamba.", "mlstm.", "slstm.")):
+            continue
+        assert spec[0] is None, (path, spec)        # layer stack
+        if path.endswith(".conv"):
+            assert spec[2] is None, (path, spec)    # the conv window
+            assert spec[3] == "model", (path, spec)  # channels -> TP
+        else:
+            divisible = [d for d in range(2, len(spec))
+                         if flat_shapes[path][d] % 16 == 0
+                         and flat_shapes[path][d] >= 16]
+            if divisible:
+                assert any(spec[d] == "model" for d in divisible), (path,
+                                                                   spec)
+    # zamba mamba.h heads (80) divide both mesh axes: they must take
+    # 'model', and 'data' must stay on the batch axis only
+    if arch == "zamba2-2.7b":
+        assert flat["mamba.h"][1] == "data"
+        assert flat["mamba.h"][2] == "model"
+    # batch=1 long-context: the data fallback must NOT land on a head dim
+    cache1 = model.make_cache(1, 4096, abstract=True, dtype=jnp.bfloat16)
+    specs1 = shd.cache_specs(model, cache1, MESH1, 1,
+                             prefer_seq=prefer_seq)
+    for p, s in jax.tree_util.tree_leaves_with_path(
+            specs1, is_leaf=lambda x: isinstance(x, P)):
+        path = path_str(p)
+        if path.startswith(("mamba.", "mlstm.", "slstm.")):
+            for a in s:
+                assert a is None or a == "model", (path, s)
+
+
 def test_batch_specs():
     toks = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
     s1 = shd.batch_specs(toks, MESH1)

@@ -68,6 +68,32 @@ def test_streamed_prefill_offset_per_family(arch):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-2.7b"])
+def test_streamed_prefill_hybrid_per_family(arch):
+    """Recurrent hybrids stream block-by-block in scan execution order
+    (mLSTM/sLSTM units; mamba units + the shared attention block) and
+    must equal the monolithic prefill bit-for-bit — logits AND every
+    recurrent-state / KV cache leaf."""
+    m = get_smoke_model(arch, n_layers=4)
+    params = m.init_params(jax.random.PRNGKey(0))
+    srv = TemplateServer(trace_batch=2, trace_seq=16)
+    srv.register(tidal.static_function("f", m, params), {})
+    sess, _ = srv.fork("f", {})
+    toks = jnp.asarray(make_prompts(m.cfg.vocab_size, 2, 16))
+    lg_s, cache_s = streamed_prefill(sess, {"tokens": toks},
+                                     m.make_cache(2, 16))
+    lg_r, cache_r = m.prefill(params, {"tokens": toks}, m.make_cache(2, 16))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_r))
+    ls, lr = jax.tree.leaves(cache_s), jax.tree.leaves(cache_r)
+    assert len(ls) == len(lr)
+    for a, b in zip(ls, lr):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # recurrent state is not position-addressable: no suffix streaming
+    with pytest.raises(ValueError):
+        streamed_prefill(sess, {"tokens": toks[:, 8:]},
+                         m.make_cache(2, 16), offset=8)
+
+
 def test_streaming_follows_traced_order(smoke_setup):
     m, params, srv = smoke_setup
     sess, _ = srv.fork("smol", {})
