@@ -104,6 +104,8 @@ class RequestResult:
     rejected: bool = False
     hedged: bool = False
     shed: bool = False           # deadline expired while queued
+    failed: bool = False         # every service attempt crashed
+    retries: int = 0             # crash retries this request consumed
 
 
 @dataclasses.dataclass
@@ -124,6 +126,18 @@ class SchedulerConfig:
     # -> Optional[float] (e.g. repro.runtime.faas.MeasuredServiceTimes);
     # None falls through to the analytic oracle per lookup
     measured: Optional[object] = None
+    # fault/availability accounting (mirrors the live gateway supervisor):
+    # each service attempt independently crashes with probability
+    # ``crash_rate`` (seeded draws — same seed, same fault schedule),
+    # burning ``crash_service_frac`` of its service time on the GPU and
+    # losing that GPU's warm instance before dying; the scheduler then
+    # retries on the least-loaded online GPU after exponential backoff,
+    # up to ``max_retries`` times, before declaring the request failed
+    crash_rate: float = 0.0
+    crash_seed: int = 0
+    max_retries: int = 2
+    retry_backoff_s: float = 0.25
+    crash_service_frac: float = 0.5
 
 
 class _GPU:
@@ -230,6 +244,10 @@ class ClusterSim:
     def run(self, requests: list) -> list:
         cfg = self.cfg
         out = []
+        # drawn only when faults are enabled, so fault-free runs replay
+        # bit-identically to configs that predate crash accounting
+        crash_rng = (np.random.default_rng(cfg.crash_seed)
+                     if cfg.crash_rate > 0 else None)
         for req in requests:
             self._apply_capacity(req.arrival_s)
             prof = self.functions[req.fn_name]
@@ -274,11 +292,50 @@ class ClusterSim:
                 kind = "cold"
             service = self._service(kind, prof, req.input_len)
 
+            # crash/retry accounting: an attempt that crashes burns part
+            # of its service on the GPU and takes the warm instance with
+            # it; the retry re-resolves placement and service class (the
+            # crashed GPU lost its warmth, so retries often go cold)
+            attempts = 0
+            failed = False
+            while (crash_rng is not None
+                   and crash_rng.random() < cfg.crash_rate):
+                wasted = cfg.crash_service_frac * service
+                gpu.busy_until = start + wasted
+                gpu.warm.pop(req.fn_name, None)
+                if attempts >= cfg.max_retries:
+                    failed = True
+                    break
+                attempts += 1
+                retry_at = (start + wasted
+                            + cfg.retry_backoff_s * (2 ** (attempts - 1)))
+                online = [g for g in self.gpus if g.online]
+                gpu = min(online, key=lambda g: max(retry_at, g.busy_until))
+                start = max(retry_at, gpu.busy_until)
+                queue = start - req.arrival_s
+                is_warm = (req.fn_name in gpu.warm
+                           and gpu.warm[req.fn_name][0] > start)
+                if is_warm and (not dynamic):
+                    kind = "warm"
+                elif is_warm and dynamic and cfg.dk:
+                    kind = "fork"
+                else:
+                    need = prof.model_bytes
+                    if gpu.free_hbm(start) < need:
+                        gpu.evict_lru(need, start)
+                    kind = "cold"
+                service = self._service(kind, prof, req.input_len)
+            if failed:
+                out.append(RequestResult(req, float("inf"), 0.0, queue,
+                                         kind, hedged=hedged, failed=True,
+                                         retries=attempts))
+                continue
+
             end = start + service
             gpu.busy_until = end
             gpu.warm[req.fn_name] = (end + cfg.keep_alive_s, prof.model_bytes)
             out.append(RequestResult(req, queue + service, service, queue,
-                                     kind, hedged=hedged))
+                                     kind, hedged=hedged, retries=attempts))
         return out
 
 
@@ -290,11 +347,19 @@ def percentile_ttft(results: list, q: float) -> float:
 
 
 def summarize(results: list) -> dict:
-    ttfts = [r.ttft_s for r in results]
+    # failed requests never produced a first token (ttft inf): they count
+    # as availability loss, not latency samples
+    ttfts = [r.ttft_s for r in results if not r.failed]
+    n = len(results)
+    completed = sum(1 for r in results
+                    if not (r.rejected or r.shed or r.failed))
     return {
-        "n": len(results),
+        "n": n,
         "rejected": sum(r.rejected for r in results),
         "shed": sum(r.shed for r in results),
+        "failed": sum(r.failed for r in results),
+        "retried": sum(r.retries > 0 and not r.failed for r in results),
+        "completed_frac": completed / n if n else None,
         "cold": sum(r.kind == "cold" and not r.rejected for r in results),
         "warm": sum(r.kind == "warm" for r in results),
         "fork": sum(r.kind == "fork" for r in results),

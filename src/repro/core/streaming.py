@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Callable, Optional
 
 import jax
@@ -30,6 +31,18 @@ from repro.models.layers import (attention_block, embed_tokens, lm_head,
                                  mlp_block, rmsnorm)
 from repro.models.registry import Model
 from repro.utils import path_str
+
+_fault_point = None
+
+
+def _visit_fault_point(point: str, detail: str) -> None:
+    # lazy import: repro.core must stay importable before repro.runtime
+    # finishes initializing (runtime.continuous imports this module)
+    global _fault_point
+    if _fault_point is None:
+        from repro.runtime.faults import fault_point
+        _fault_point = fault_point
+    _fault_point(point, detail)
 
 
 @dataclasses.dataclass
@@ -43,11 +56,24 @@ class WeightStreamer:
     """Background device uploader following the traced access order."""
 
     def __init__(self, entries: list, resident: dict, dynamic: dict,
-                 record_order: bool = True):
-        """resident/dynamic: {path: device array} available immediately."""
+                 record_order: bool = True, fetch_retries: int = 2,
+                 retry_backoff_s: float = 0.005,
+                 max_backoff_s: float = 0.25):
+        """resident/dynamic: {path: device array} available immediately.
+
+        A slice fetch that raises is retried up to ``fetch_retries`` times
+        with capped exponential backoff (``retry_backoff_s`` doubling up
+        to ``max_backoff_s``) before the failure propagates — transient
+        source hiccups (a flaky host pool read, an injected fault) cost
+        latency, not the fork.  Slices that completed before a terminal
+        failure stay servable either way."""
         self.entries = entries
         self.resident = dict(resident)
         self.dynamic = dict(dynamic)
+        self.fetch_retries = int(fetch_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
+        self.retries_used = 0
         self._arrays: dict = {}
         self._events: dict = {e.key: threading.Event() for e in entries}
         self.completed_order: list = [] if record_order else None
@@ -59,16 +85,32 @@ class WeightStreamer:
         self._thread.start()
         return self
 
-    def _run(self):
-        try:
-            for e in self.entries:
+    def _fetch_one(self, e: StreamEntry):
+        """Fetch + upload one slice, retrying transient failures."""
+        delay = self.retry_backoff_s
+        attempt = 0
+        while True:
+            try:
+                _visit_fault_point("weight_fetch",
+                                   f"{e.key[0]}:{e.key[1]}")
                 # with a sharding the upload IS the placement: each slice
                 # lands directly in its NamedSharding device buffers (the
                 # tensor-parallel fork never materializes a replica)
                 if e.sharding is not None:
-                    arr = jax.device_put(e.fetch(), e.sharding)
-                else:
-                    arr = jnp.asarray(e.fetch())
+                    return jax.device_put(e.fetch(), e.sharding)
+                return jnp.asarray(e.fetch())
+            except Exception:
+                attempt += 1
+                if attempt > self.fetch_retries:
+                    raise
+                self.retries_used += 1
+                time.sleep(delay)
+                delay = min(delay * 2.0, self.max_backoff_s)
+
+    def _run(self):
+        try:
+            for e in self.entries:
+                arr = self._fetch_one(e)
                 self._arrays[e.key] = arr
                 if self.completed_order is not None:
                     self.completed_order.append(e.key)

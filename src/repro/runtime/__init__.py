@@ -1,5 +1,12 @@
 """Serving runtime subsystem.
 
+  errors      — consolidated typed-failure taxonomy (RuntimeFailure base:
+                PoolExhausted, DeadlineExceeded, Overloaded,
+                EngineFailure, PartitionViolation, InjectedFault...)
+  faults      — deterministic fault-injection plane: seeded FaultPlan
+                scheduling typed InjectedFaults at named points
+                (weight fetch, prefill chunk, decode quantum, adapter
+                load, engine step)
   engine      — sequential fixed-batch generation (the reference path)
   kv_pool     — KV cache pools: dense slot-indexed (recurrent-state
                 families) and block-paged with per-slot page tables,
@@ -13,7 +20,9 @@
                 bounded stepping)
   gateway     — async invocation gateway: InvocationRequest tickets,
                 streaming InvocationHandles, deadline-aware interleaved
-                engine scheduling in bounded quanta
+                engine scheduling in bounded quanta, crash supervision
+                (bounded retry, partition-safe lease teardown) and
+                graceful brown-out under admission pressure
   faas        — FaaSRuntime front-end over TemplateServer + prewarm +
                 continuous batching with template-baked prompt caches,
                 plus length-bucketed measured service-time oracles for
@@ -25,21 +34,35 @@ from repro.runtime.continuous import (ContinuousBatchingEngine, Request,
                                       RequestOutput, sharded_serve_fns)
 from repro.runtime.engine import (Engine, GenerationResult, sample_greedy,
                                   sample_token)
+from repro.runtime.errors import (AdapterLoadFault, DeadlineExceeded,
+                                  DecodeFault, EngineFailure,
+                                  EngineStepFault, InjectedFault,
+                                  InvocationCancelled, Overloaded,
+                                  PartitionViolation, PoolExhausted,
+                                  PrefillFault, RuntimeFailure,
+                                  WeightFetchFault)
 from repro.runtime.faas import (FaaSRuntime, MeasuredServiceTimes,
                                 measure_service_times)
-from repro.runtime.gateway import (DeadlineExceeded, InvocationCancelled,
-                                   InvocationGateway, InvocationHandle,
+from repro.runtime.faults import (INJECTION_POINTS, FaultPlan, FaultSpec,
+                                  fault_point, install_fault_plan,
+                                  use_fault_plan)
+from repro.runtime.gateway import (InvocationGateway, InvocationHandle,
                                    InvocationRequest, SubmitResult)
 from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
-                                   PoolExhausted, PrefixHandle)
+                                   PrefixHandle)
 from repro.runtime.prefix import PrefixIndex
 
 __all__ = [
-    "ContinuousBatchingEngine", "DeadlineExceeded", "Engine", "FaaSRuntime",
-    "GenerationResult", "InvocationCancelled", "InvocationGateway",
-    "InvocationHandle", "InvocationRequest", "KVCachePool",
-    "MeasuredServiceTimes", "PagedKVCachePool", "PoolExhausted",
-    "PrefixHandle", "PrefixIndex", "Request", "RequestOutput",
-    "ShardingPlan", "SubmitResult", "measure_service_times",
-    "sample_greedy", "sample_token", "serving_plan", "sharded_serve_fns",
+    "AdapterLoadFault", "ContinuousBatchingEngine", "DeadlineExceeded",
+    "DecodeFault", "Engine", "EngineFailure", "EngineStepFault",
+    "FaaSRuntime", "FaultPlan", "FaultSpec", "GenerationResult",
+    "INJECTION_POINTS", "InjectedFault", "InvocationCancelled",
+    "InvocationGateway", "InvocationHandle", "InvocationRequest",
+    "KVCachePool", "MeasuredServiceTimes", "Overloaded",
+    "PagedKVCachePool", "PartitionViolation", "PoolExhausted",
+    "PrefillFault", "PrefixHandle", "PrefixIndex", "Request",
+    "RequestOutput", "RuntimeFailure", "ShardingPlan", "SubmitResult",
+    "WeightFetchFault", "fault_point", "install_fault_plan",
+    "measure_service_times", "sample_greedy", "sample_token",
+    "serving_plan", "sharded_serve_fns", "use_fault_plan",
 ]

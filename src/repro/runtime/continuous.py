@@ -71,6 +71,7 @@ from repro.core.streaming import (ForkSession, streamed_prefill,
 from repro.distributed.sharding import ShardingPlan, use_kernel_mesh
 from repro.models.registry import Model
 from repro.runtime.engine import sample_greedy, sample_token
+from repro.runtime.faults import fault_point
 from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
                                    PoolExhausted)
 
@@ -279,6 +280,7 @@ class ContinuousBatchingEngine:
         # advances every slot's recurrent state) and stay exclusive.
         self._owner = (self.pool.register_owner(owner_name)
                        if self.paged else None)
+        self.owner_name = owner_name     # fault-plane / failure-log label
         self.queue: collections.deque = collections.deque()
         self.active: dict = {}                       # slot -> _Active
         self.results: dict = {}                      # req_id -> RequestOutput
@@ -388,6 +390,7 @@ class ContinuousBatchingEngine:
         from repro.models.adapters import load_adapter
         if self.adapter_bank is None:
             raise ValueError("engine was built without an adapter bank")
+        fault_point("adapter_load", f"row={idx}")
         self.adapter_bank = load_adapter(self.adapter_bank, idx, adapter,
                                          self.model, alpha=alpha)
 
@@ -580,6 +583,10 @@ class ContinuousBatchingEngine:
                             req.top_p, req.seed, 0)
 
     def _admit(self, req: Request) -> None:
+        # injection point BEFORE any allocation: a crash here leaves no
+        # slot or page behind for teardown to account for
+        fault_point("prefill_chunk",
+                    f"admit:req={req.req_id}:len={len(req.prompt)}")
         hit = self._prefix_hit(req) if self.paged else None
         reuse = hit[1] if hit else 0
         if self.paged and self._chunked(req, reuse):
@@ -610,6 +617,20 @@ class ContinuousBatchingEngine:
                                    reuse_len=reuse, owner=self._owner)
         else:
             slot = self.pool.alloc()
+        try:
+            self._prefill_into(req, slot, reuse)
+        except BaseException:
+            # crash between alloc and active-registration: hand the slot
+            # (and its pages, prefix refcounts included) straight back so
+            # engine teardown has nothing unaccounted to leak
+            if self.paged:
+                self.pool.release(slot, owner=self._owner)
+            else:
+                self.pool.release(slot)
+            raise
+
+    def _prefill_into(self, req: Request, slot: int, reuse: int) -> None:
+        """Whole-prompt (or suffix-only) prefill into an allocated slot."""
         streamed = (self.session is not None and self._params is None
                     and self.adapter_bank is None
                     and supports_streamed_prefill(self.model))
@@ -678,6 +699,11 @@ class ContinuousBatchingEngine:
         extend the slot's page budget yet (retried next step)."""
         st = self.active[slot]
         req = st.req
+        # injection point with the slot parked mid-prefill: first-chunk
+        # pages (and any extend_budget reservations) are held, so a crash
+        # here exercises the full partition-teardown accounting
+        fault_point("prefill_chunk",
+                    f"chunk:req={req.req_id}:cursor={st.cursor}")
         P = len(req.prompt)
         ps = self.pool.page_size
         rem = P - st.cursor
@@ -766,6 +792,11 @@ class ContinuousBatchingEngine:
         decode over the slots past their prompt, retire the finished.
 
         Returns False once the engine is fully drained."""
+        if self.queue or self.active:
+            # injection point before any work or allocation this step
+            fault_point("engine_step",
+                        f"{self.owner_name or 'engine'}:"
+                        f"pending={self.n_pending}")
         if (self.queue or self.active) and not self.paged:
             # a DENSE pool's batched decode advances EVERY slot's
             # recurrent state — there is no masked view that protects a
@@ -804,6 +835,11 @@ class ContinuousBatchingEngine:
                 budget -= n
                 chunked += n
         decoding = [s for s in self.active if not self.active[s].prefilling]
+        if decoding:
+            # injection point at the decode-quantum boundary: active slots
+            # hold their full reserved budgets, results are partial
+            fault_point("decode_quantum",
+                        f"{self.owner_name or 'engine'}:n={len(decoding)}")
         if not decoding:
             if not self.active:
                 if self.queue:

@@ -100,7 +100,11 @@ class FaaSRuntime:
                  locality_max_extra_load: int = 2,
                  gateway_quantum: int = 2,
                  chunk_tokens: Optional[int] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.0,
+                 max_live: Optional[int] = None,
+                 brownout_threshold: float = 0.75,
+                 brownout_max_new: Optional[int] = None):
         self.mesh = mesh
         self.locality_max_extra_load = locality_max_extra_load
         self.instances = self._make_instances(mesh)
@@ -151,9 +155,15 @@ class FaaSRuntime:
         self._shared_bases: dict[str, dict] = {}
         self._adapter_fns: dict[str, tuple] = {}
         # the async front door: submit() tickets route through this loop;
-        # the legacy tuple APIs are thin compat shims over it
-        self.gateway = InvocationGateway(self, quantum=gateway_quantum,
-                                         quantum_tokens=chunk_tokens)
+        # the legacy tuple APIs are thin compat shims over it.  The
+        # gateway also supervises engine crashes (max_retries bounded
+        # retry with backoff) and degrades gracefully under pressure
+        # (max_live bounded admission, brown-out budget clamps)
+        self.gateway = InvocationGateway(
+            self, quantum=gateway_quantum, quantum_tokens=chunk_tokens,
+            max_retries=max_retries, retry_backoff_s=retry_backoff_s,
+            max_live=max_live, brownout_threshold=brownout_threshold,
+            brownout_max_new=brownout_max_new)
 
     @staticmethod
     def _make_instances(mesh: Optional[Mesh]) -> list:
@@ -676,7 +686,8 @@ class FaaSRuntime:
             prefill_from_fn=prefill_from_fn,
             page_size=self.page_size, plan=inst.plan,
             pool=self._pool_for(inst, model),
-            bucket_suffix=True, chunk_tokens=self.chunk_tokens)
+            bucket_suffix=True, chunk_tokens=self.chunk_tokens,
+            owner_name=f"{fn_name}@{inst.idx}")
         # a lazy per-instance bake reuses THIS fork's params rather than
         # streaming the model a second time (params_fn only resolves —
         # blocking on the stream — when a bake actually happens here)

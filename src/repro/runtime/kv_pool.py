@@ -79,10 +79,10 @@ import numpy as np
 from repro.distributed.sharding import ShardingPlan
 from repro.models import quant
 from repro.models.registry import Model
+from repro.runtime.errors import PartitionViolation, PoolExhausted
 
-
-class PoolExhausted(RuntimeError):
-    """No free slot/pages for an allocation (admission should defer)."""
+__all__ = ["PoolExhausted", "PartitionViolation", "PrefixHandle",
+           "KVCachePool", "PagedKVCachePool"]
 
 
 @dataclasses.dataclass
@@ -371,7 +371,7 @@ class PagedKVCachePool:
             whose = (f"partition {held_by} "
                      f"({self._owners.get(held_by)!r})"
                      if held_by is not None else "no partition")
-            raise PermissionError(
+            raise PartitionViolation(
                 f"slot {slot}: owner {owner} "
                 f"({self._owners.get(owner)!r}) may not {verb} a slot "
                 f"held by {whose}")

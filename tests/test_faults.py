@@ -1,0 +1,577 @@
+"""Chaos suite: deterministic fault injection + supervised recovery.
+
+Every test runs under a seeded :class:`FaultPlan`, so a failure replays
+exactly.  ``CHAOS_SEED`` (CI matrix) varies the seeds without changing
+the invariants:
+
+  * typed-error taxonomy and back-compat aliases,
+  * FaultPlan scheduling semantics (match filters, visit counting,
+    bernoulli determinism),
+  * WeightStreamer fetch retries (transient absorbed, permanent
+    propagates with completed slices still servable),
+  * gateway crash supervision: partition-safe lease teardown, bounded
+    retry with bit-identical replays, typed give-up, cancel-in-retry,
+  * pump-thread fatal errors failing open handles typed (no hangs),
+  * bounded admission (Overloaded / priority shed) and brown-out clamps,
+  * ClusterSim crash/retry accounting.
+"""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api as tidal
+from repro.core.plans import plan_for
+from repro.core.scheduler import (ClusterSim, FunctionProfile,
+                                  SchedulerConfig, make_trace, summarize)
+from repro.core.streaming import StreamEntry, WeightStreamer
+from repro.models.registry import get_smoke_model
+from repro.runtime import kv_pool as kv_pool_mod
+from repro.runtime.engine import Engine
+from repro.runtime.errors import (AdapterLoadFault, DeadlineExceeded,
+                                  DecodeFault, EngineFailure,
+                                  EngineStepFault, InjectedFault,
+                                  InvocationCancelled, Overloaded,
+                                  PartitionViolation, PoolExhausted,
+                                  PrefillFault, RuntimeFailure,
+                                  WeightFetchFault)
+from repro.runtime.faas import FaaSRuntime
+from repro.runtime.faults import (INJECTION_POINTS, FaultPlan, FaultSpec,
+                                  active_fault_plan, fault_point,
+                                  install_fault_plan, use_fault_plan)
+from repro.runtime.gateway import InvocationRequest
+
+SEED = int(os.environ.get("CHAOS_SEED", "0"))
+MAX_LEN = 32
+
+
+def _model(n_layers=2):
+    return get_smoke_model("smollm-135m", n_layers=n_layers)
+
+
+def _want(m, params, prompt, n, cache_len=MAX_LEN):
+    return Engine(m, params, donate_cache=False).generate(
+        prompt[None], max_new_tokens=n, cache_len=cache_len).tokens[0]
+
+
+@pytest.fixture(autouse=True)
+def _no_plan_leaks():
+    assert active_fault_plan() is None, "a previous test leaked a plan"
+    yield
+    install_fault_plan(None)
+
+
+# ---------------------------------------------------------------------------
+# typed errors + the fault plan itself
+# ---------------------------------------------------------------------------
+
+def test_error_taxonomy_and_reexports():
+    """One RuntimeFailure base covers every typed failure; the aliases
+    older call sites import keep working (kv_pool.PoolExhausted IS
+    errors.PoolExhausted, PartitionViolation still catches as
+    PermissionError)."""
+    for exc in (PoolExhausted, DeadlineExceeded, InvocationCancelled,
+                Overloaded, EngineFailure, PartitionViolation,
+                InjectedFault, WeightFetchFault, PrefillFault, DecodeFault,
+                AdapterLoadFault, EngineStepFault):
+        assert issubclass(exc, RuntimeFailure)
+        assert issubclass(exc, RuntimeError)
+    assert kv_pool_mod.PoolExhausted is PoolExhausted
+    assert kv_pool_mod.PartitionViolation is PartitionViolation
+    assert issubclass(PartitionViolation, PermissionError)
+    with pytest.raises(PermissionError, match="tenant-a"):
+        raise PartitionViolation("slot owned by tenant-a")
+    f = WeightFetchFault("boom", point="weight_fetch", detail="embed:0")
+    assert isinstance(f, InjectedFault)
+    assert (f.point, f.detail) == ("weight_fetch", "embed:0")
+
+
+def test_fault_plan_schedule_match_and_log():
+    """Per-spec visit counters only advance on matching details; exactly
+    the scheduled visit fires, typed per point, and the fired log records
+    it.  reset() replays the schedule from scratch."""
+    plan = FaultPlan([FaultSpec("prefill_chunk", at=1, match="chunk:"),
+                      FaultSpec("decode_quantum", at=0)])
+    plan.check("prefill_chunk", "admit:req=0:len=9")   # filtered out
+    plan.check("prefill_chunk", "chunk:req=0:cursor=0")  # visit 0: survives
+    with pytest.raises(PrefillFault) as ei:
+        plan.check("prefill_chunk", "chunk:req=0:cursor=8")  # visit 1
+    assert ei.value.point == "prefill_chunk"
+    assert "cursor=8" in ei.value.detail
+    with pytest.raises(DecodeFault):
+        plan.check("decode_quantum", "fn-a@0:n=1")     # visit 0 of spec 1
+    plan.check("decode_quantum", "fn-a@0:n=1")         # visit 1: survives
+    assert plan.counts["prefill_chunk"] == 3
+    assert [f["point"] for f in plan.fired] == ["prefill_chunk",
+                                                "decode_quantum"]
+    plan.reset()
+    assert plan.fired == [] and plan.counts["decode_quantum"] == 0
+    plan.check("prefill_chunk", "chunk:again")         # visit 0 again: fine
+    with pytest.raises(ValueError, match="unknown injection point"):
+        plan.check("warp_core")
+    with pytest.raises(ValueError):
+        FaultSpec("decode_quantum", at=-1)
+    with pytest.raises(ValueError):
+        FaultSpec("bogus_point", at=0)
+
+
+def test_fault_plan_bernoulli_deterministic():
+    """bernoulli(seed, rates) is a pure function of its arguments — the
+    same seed always schedules the same visits (what lets the recovery
+    benchmark replay identical fault schedules), a different seed a
+    different one."""
+    rates = {"engine_step": 0.3, "weight_fetch": 0.1}
+    p1 = FaultPlan.bernoulli(SEED, rates, horizon=128)
+    p2 = FaultPlan.bernoulli(SEED, rates, horizon=128)
+    assert p1.specs == p2.specs and len(p1.specs) > 0
+    assert all(s.times == 1 and s.point in INJECTION_POINTS
+               for s in p1.specs)
+    p3 = FaultPlan.bernoulli(SEED + 1, rates, horizon=128)
+    assert p3.specs != p1.specs
+
+
+def test_fault_point_noop_without_plan():
+    """With no plan installed the hooks cost (almost) nothing and never
+    raise; use_fault_plan() restores the previous plan on exit."""
+    assert active_fault_plan() is None
+    for point in INJECTION_POINTS:
+        fault_point(point, "anything")                 # must not raise
+    plan = FaultPlan([FaultSpec("engine_step", at=0)])
+    with use_fault_plan(plan) as active:
+        assert active_fault_plan() is plan and active is plan
+        with pytest.raises(EngineStepFault):
+            fault_point("engine_step", "x")
+    assert active_fault_plan() is None
+    fault_point("engine_step", "x")                    # uninstalled again
+
+
+# ---------------------------------------------------------------------------
+# weight streamer retries
+# ---------------------------------------------------------------------------
+
+def test_streamer_retries_transient_fetch():
+    """A slice fetch that fails transiently — a raising source or an
+    injected weight_fetch fault — is retried with backoff and the stream
+    completes; consumers never see the hiccup."""
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise IOError("host pool hiccup")
+        return np.ones(4, np.float32)
+
+    ws = WeightStreamer([StreamEntry(("a", ()), fetch=flaky)], {}, {},
+                        retry_backoff_s=0.001)
+    ws.start()
+    ws.wait_all()
+    np.testing.assert_array_equal(np.asarray(ws.get(("a", ()))), 1.0)
+    assert calls["n"] == 2 and ws.retries_used == 1
+
+    # injected flavor: the fault plane fails visit 0 of the fetch point;
+    # the retry revisits it (visit 1) and succeeds
+    plan = FaultPlan([FaultSpec("weight_fetch", at=0, match="b:")])
+    with use_fault_plan(plan):
+        ws2 = WeightStreamer(
+            [StreamEntry(("b", ()), fetch=lambda: np.zeros(2, np.float32))],
+            {}, {}, retry_backoff_s=0.001)
+        ws2.start()
+        ws2.wait_all()
+    assert ws2.retries_used == 1
+    assert [f["point"] for f in plan.fired] == ["weight_fetch"]
+
+
+def test_streamer_permanent_fetch_failure_propagates():
+    """A fetch that outlives the retry budget propagates (typed) to every
+    waiter after exactly fetch_retries + 1 attempts; slices completed
+    before the failure stay servable."""
+    calls = {"n": 0}
+
+    def ok():
+        return np.ones(4, np.float32)
+
+    def boom():
+        calls["n"] += 1
+        raise IOError("checkpoint shard gone")
+
+    ws = WeightStreamer([StreamEntry(("a", ()), fetch=ok),
+                         StreamEntry(("b", ()), fetch=boom)], {}, {},
+                        fetch_retries=2, retry_backoff_s=0.0)
+    ws.start()
+    with pytest.raises(IOError, match="shard gone"):
+        ws.wait_all()
+    assert calls["n"] == 3                             # 1 try + 2 retries
+    np.testing.assert_array_equal(np.asarray(ws.get(("a", ()))), 1.0)
+    with pytest.raises(IOError, match="shard gone"):
+        ws.get(("b", ()))
+
+
+# ---------------------------------------------------------------------------
+# gateway supervision: crash recovery on the live runtime
+# ---------------------------------------------------------------------------
+
+def test_gateway_recovers_engine_crash_bit_identical():
+    """An engine crash mid-decode is supervised: the lease tears down
+    partition-safely (co-tenant stats bit-identical, every page back),
+    the ticket retries on a fresh fork and its tokens are bit-identical
+    to the fault-free oracle — the consumer observes only latency."""
+    m = _model()
+    pa = m.init_params(jax.random.PRNGKey(0))
+    pb = m.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(SEED)
+    prompt_a = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    prompt_b = rng.integers(0, m.cfg.vocab_size, 7).astype(np.int32)
+    want_a = _want(m, pa, prompt_a, 6)
+    want_b = _want(m, pb, prompt_b, 6)
+
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn-a", m, pa), {})
+    rt.deploy(tidal.static_function("fn-b", m, pb), {})
+    rt.submit("fn-a", {}, prompt_a, 2)                 # warm + compile
+    rt.submit("fn-b", {}, prompt_b, 2)
+    baseline = rt.kv_pool_stats()
+
+    plan = FaultPlan([FaultSpec("engine_step", at=2, match="fn-a@")])
+    with use_fault_plan(plan):
+        ha = rt.submit(InvocationRequest("fn-a", prompt_a, max_new_tokens=6))
+        hb = rt.submit(InvocationRequest("fn-b", prompt_b, max_new_tokens=6))
+        ra, rb = ha.result(), hb.result()
+
+    np.testing.assert_array_equal(ra.tokens, want_a)   # replay is bit-exact
+    np.testing.assert_array_equal(rb.tokens, want_b)   # co-tenant untouched
+    assert ra.retries == 1 and rb.retries == 0
+    assert [f["point"] for f in plan.fired] == ["engine_step"]
+    assert rt.gateway.stats["engine_failures"] == 1
+    assert rt.gateway.stats["retries"] == 1
+    assert rt.gateway.stats["gave_up"] == 0
+    (entry,) = rt.gateway.failures
+    assert entry["engine_key"] == ("fn-a", ())
+    assert entry["n_victims"] == 1
+    assert entry["cotenants_intact"]
+    # the dead partition's pages all returned to the arena, exactly:
+    # mapped pages rejoin the free list, and its decode reservations
+    # come back on top of them in the admission-available count
+    assert (entry["free_pages_after"] - entry["free_pages_before"]
+            == entry["victim_mapped_pages"])
+    assert (entry["available_pages_after"] - entry["available_pages_before"]
+            == entry["victim_mapped_pages"] + entry["victim_reserved_pages"])
+    assert entry["victim_mapped_pages"] > 0
+    assert rt.kv_pool_stats() == baseline              # nothing leaked
+
+
+def test_retry_budget_exhausted_is_typed_failure():
+    """With a zero per-request retry budget a crash terminalizes the
+    ticket as typed EngineFailure (cause = the injected fault) while the
+    co-tenant still completes bit-identically and every page returns."""
+    m = _model()
+    pa = m.init_params(jax.random.PRNGKey(0))
+    pb = m.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(SEED + 1)
+    prompt_a = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    prompt_b = rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+    want_b = _want(m, pb, prompt_b, 5)
+
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn-a", m, pa), {})
+    rt.deploy(tidal.static_function("fn-b", m, pb), {})
+    rt.submit("fn-a", {}, prompt_a, 2)
+    rt.submit("fn-b", {}, prompt_b, 2)
+    baseline = rt.kv_pool_stats()
+
+    plan = FaultPlan([FaultSpec("engine_step", at=1, match="fn-a@")])
+    with use_fault_plan(plan):
+        ha = rt.submit(InvocationRequest("fn-a", prompt_a, max_new_tokens=6,
+                                         max_retries=0))
+        hb = rt.submit(InvocationRequest("fn-b", prompt_b, max_new_tokens=5))
+        with pytest.raises(EngineFailure, match="retry budget"):
+            ha.result()
+        rb = hb.result()
+
+    assert ha.status == "failed"
+    assert isinstance(ha._error.__cause__, EngineStepFault)
+    np.testing.assert_array_equal(rb.tokens, want_b)
+    assert rt.gateway.stats["gave_up"] == 1
+    assert rt.gateway.stats["retries"] == 0
+    assert rt.gateway.failures[0]["cotenants_intact"]
+    assert rt.kv_pool_stats() == baseline
+
+
+def test_crash_mid_chunked_prefill_partition_safe():
+    """A crash BETWEEN prefill chunks — while the request holds borrowed
+    COW prefix pages AND extend_budget reservations — returns the whole
+    partition to baseline (prefix refcounts drop back to the pin's 1),
+    leaves the co-tenant decoding bit-identically, and the retried
+    request re-prefills (cheaply, via prefix reuse) to bit-identical
+    tokens."""
+    max_len = 48
+    m = _model()
+    pa = m.init_params(jax.random.PRNGKey(0))
+    pb = m.init_params(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(SEED)
+    template = rng.integers(0, m.cfg.vocab_size, 12).astype(np.int32)
+
+    rt = FaaSRuntime(n_slots=2, max_len=max_len, trace_seq=8, page_size=4,
+                     chunk_tokens=8, prewarm=False)
+    rt.deploy(tidal.static_function("fn-a", m, pa), {},
+              template_prompt=template)
+    rt.deploy(tidal.static_function("fn-b", m, pb), {})
+    handle = rt._prefix_handles[("fn-a", 0, ())]
+    pool = next(iter(rt._pools.values()))
+    baseline = rt.kv_pool_stats()
+    assert pool.prefix_page_refs(handle) == [1, 1, 1]  # 12 tokens, 3 pages
+
+    borrower = np.concatenate(
+        [template, rng.integers(0, m.cfg.vocab_size, 16).astype(np.int32)])
+    other = rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+    want_a = _want(m, pa, borrower, 6, cache_len=max_len)
+    want_b = _want(m, pb, other, 6, cache_len=max_len)
+
+    # the 16-token suffix after prefix reuse splits into two 8-token
+    # chunks; visit 1 of the chunk path (NOT the admit path) is the
+    # second chunk — the crash lands mid-prefill, reservations live
+    plan = FaultPlan([FaultSpec("prefill_chunk", at=1, match="chunk:")])
+    with use_fault_plan(plan):
+        ha = rt.submit(InvocationRequest("fn-a", borrower, max_new_tokens=6))
+        hb = rt.submit(InvocationRequest("fn-b", other, max_new_tokens=6))
+        ra, rb = ha.result(), hb.result()
+
+    assert [f["point"] for f in plan.fired] == ["prefill_chunk"]
+    assert "chunk:" in plan.fired[0]["detail"]
+    np.testing.assert_array_equal(ra.tokens, want_a)
+    np.testing.assert_array_equal(rb.tokens, want_b)
+    assert ra.retries == 1
+    (entry,) = rt.gateway.failures
+    assert entry["cotenants_intact"] and entry["n_victims"] == 1
+    assert pool.prefix_page_refs(handle) == [1, 1, 1]  # pin survives, alone
+    assert rt.kv_pool_stats() == baseline
+
+
+def test_crash_during_admission_is_retried():
+    """A crash catching a request mid-admission — popped off the engine
+    queue but not yet in the active set — is still a victim: the
+    supervisor must re-queue it (not let the harvest pass terminalize it
+    as a cancelled orphan) and the retry completes bit-identically."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    prompt = rng.integers(0, m.cfg.vocab_size, 8).astype(np.int32)
+    want = _want(m, params, prompt, 5)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    rt.submit("fn", {}, prompt, 2)
+    baseline = rt.kv_pool_stats()
+
+    plan = FaultPlan([FaultSpec("prefill_chunk", at=0, match="admit:")])
+    with use_fault_plan(plan):
+        h = rt.submit(InvocationRequest("fn", prompt, max_new_tokens=5))
+        res = h.result()
+    np.testing.assert_array_equal(res.tokens, want)
+    assert res.retries == 1
+    assert rt.gateway.failures[0]["n_victims"] == 1
+    assert rt.kv_pool_stats() == baseline
+
+
+def test_cancel_while_awaiting_retry():
+    """A ticket parked in the retry queue (backoff pending, engine=None)
+    cancels cleanly: it leaves the queue, terminalizes as cancelled, and
+    the arena is back at baseline."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = (np.arange(8, dtype=np.int32) + SEED) % m.cfg.vocab_size
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False, retry_backoff_s=30.0)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    rt.submit("fn", {}, prompt, 2)
+    baseline = rt.kv_pool_stats()
+
+    plan = FaultPlan([FaultSpec("engine_step", at=1, match="fn@")])
+    with use_fault_plan(plan):
+        h = rt.submit(InvocationRequest("fn", prompt, max_new_tokens=6))
+        deadline = time.monotonic() + 60.0
+        while (rt.gateway.stats["engine_failures"] == 0
+               and time.monotonic() < deadline):
+            rt.gateway.pump(timeout=0.05)
+        assert rt.gateway.stats["engine_failures"] == 1
+        assert h.engine is None and not h.done          # parked for retry
+        assert h.cancel()
+    assert h.status == "cancelled"
+    assert rt.gateway._retry == []
+    assert h.result().status == "cancelled"
+    assert rt.kv_pool_stats() == baseline
+
+
+def test_pump_thread_fatal_error_fails_open_handles():
+    """A non-engine exception escaping the pump loop is fatal-but-loud:
+    every open handle raises typed EngineFailure (no passive waiter ever
+    hangs), the thread stops, and stop_pump stays idempotent."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    prompt = np.arange(6, dtype=np.int32) % m.cfg.vocab_size
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    rt.submit("fn", {}, prompt, 2)                     # compile first
+
+    boom = ValueError("scheduler invariant violated")
+
+    def bad_round():
+        raise boom
+
+    rt.gateway._round = bad_round
+    rt.gateway.start_pump()
+    try:
+        h = rt.submit(InvocationRequest("fn", prompt, max_new_tokens=4))
+        with pytest.raises(EngineFailure, match="pump thread crashed"):
+            h.result(timeout=30.0)
+    finally:
+        rt.gateway.stop_pump()
+    assert h.status == "failed"
+    assert h._error.__cause__ is boom
+    assert rt.gateway._pump_thread is None
+    rt.gateway.stop_pump()                             # idempotent
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: bounded admission + brown-out
+# ---------------------------------------------------------------------------
+
+def test_overload_rejection_and_priority_shed():
+    """At max_live, an arrival that outranks nothing is rejected typed;
+    one that outranks a queued ticket sheds it (the victim raises
+    Overloaded) and then completes bit-identically."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    prompts = [rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(3)]
+    want_hi = _want(m, params, prompts[2], 4)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False, max_live=1)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    rt.submit("fn", {}, prompts[0], 2)                 # compile (then idle)
+
+    ha = rt.submit(InvocationRequest("fn", prompts[0], max_new_tokens=4))
+    assert rt.gateway.pressure() == 1.0
+    with pytest.raises(Overloaded, match="max_live"):
+        rt.submit(InvocationRequest("fn", prompts[1], max_new_tokens=4))
+    assert rt.gateway.stats["overload_rejections"] == 1
+
+    hc = rt.submit(InvocationRequest("fn", prompts[2], max_new_tokens=4,
+                                     priority=5))      # outranks queued ha
+    assert ha.done and ha.status == "failed"
+    with pytest.raises(Overloaded, match="shed"):
+        ha.result()
+    assert rt.gateway.stats["pressure_sheds"] == 1
+    np.testing.assert_array_equal(hc.result().tokens, want_hi)
+
+
+def test_brownout_clamps_decode_budget():
+    """Past the brown-out threshold new arrivals' max_new_tokens clamp to
+    brownout_max_new; greedy determinism makes the clamped stream a
+    bit-exact prefix of the unclamped oracle."""
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    p1 = rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+    p2 = rng.integers(0, m.cfg.vocab_size, 7).astype(np.int32)
+    want1 = _want(m, params, p1, 8)
+    want2 = _want(m, params, p2, 8)
+    rt = FaaSRuntime(n_slots=2, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False, max_live=4, brownout_threshold=0.5,
+                     brownout_max_new=2)
+    rt.deploy(tidal.static_function("fn", m, params), {})
+    rt.submit("fn", {}, p1, 2)                         # compile (then idle)
+
+    h1 = rt.submit(InvocationRequest("fn", p1, max_new_tokens=8))
+    assert not h1.browned_out                          # pressure 1/4 < 1/2
+    h2 = rt.submit(InvocationRequest("fn", p2, max_new_tokens=8))
+    assert h2.browned_out                              # pressure hit 2/4
+    assert rt.gateway.brownout_active()
+    assert rt.gateway.stats["brownout_clamps"] == 1
+    r1, r2 = h1.result(), h2.result()
+    np.testing.assert_array_equal(r1.tokens, want1)    # admitted pre-brownout
+    assert len(r2.tokens) == 2
+    np.testing.assert_array_equal(r2.tokens, want2[:2])
+    assert not rt.gateway.brownout_active()            # pressure drained
+
+
+# ---------------------------------------------------------------------------
+# adapter bank-row faults
+# ---------------------------------------------------------------------------
+
+def test_adapter_load_fault_typed_and_recoverable():
+    """An injected adapter bank-row load fault surfaces typed from
+    submit(); the next submit retries the row load and serves tokens
+    bit-identical to the merged-weight oracle."""
+    path = "blocks.attn.wq"
+    m = _model()
+    params = m.init_params(jax.random.PRNGKey(0))
+    rt = FaaSRuntime(n_slots=3, max_len=MAX_LEN, trace_seq=8, page_size=4,
+                     prewarm=False)
+    rt.deploy_shared_base(tidal.static_function("base", m, params),
+                          n_adapters=4, rank=4, target_paths=(path,))
+    ad = tidal.lora_checkpoint("ad", m, [path], rank=4, seed=1)
+    rt.attach_adapter("fn-1", "base", ad, alpha=0.7)
+
+    A = np.asarray(ad.arrays[path + ".A"], np.float32)
+    B = np.asarray(ad.arrays[path + ".B"], np.float32)
+    wq = np.asarray(params["blocks"]["attn"]["wq"])
+    delta = ((A @ B) * 0.7).reshape(wq.shape).astype(wq.dtype)
+    merged = {**params,
+              "blocks": {**params["blocks"],
+                         "attn": {**params["blocks"]["attn"],
+                                  "wq": jnp.asarray(wq + delta)}}}
+    rng = np.random.default_rng(SEED)
+    prompt = rng.integers(0, m.cfg.vocab_size, 6).astype(np.int32)
+    want = _want(m, merged, prompt, 4)
+
+    plan = FaultPlan([FaultSpec("adapter_load", at=0)])
+    with use_fault_plan(plan):
+        with pytest.raises(AdapterLoadFault):
+            rt.submit(InvocationRequest("fn-1", prompt, max_new_tokens=4))
+        h = rt.submit(InvocationRequest("fn-1", prompt, max_new_tokens=4))
+        np.testing.assert_array_equal(h.result().tokens, want)
+    assert [f["point"] for f in plan.fired] == ["adapter_load"]
+
+
+# ---------------------------------------------------------------------------
+# cluster-sim crash/retry accounting
+# ---------------------------------------------------------------------------
+
+def test_clustersim_crash_accounting():
+    """Seeded crashes are deterministic, retries strictly improve the
+    completed fraction over giving up, and a crash-free config is
+    bit-identical to the pre-crash-field baseline (failed/retried = 0)."""
+    plan = plan_for("smollm-135m", 1, 867)
+    prof = FunctionProfile(
+        name="f", plan_for_len=lambda L: plan_for("smollm-135m", 1, L),
+        model_bytes=plan.total_weight_bytes)
+    trace = make_trace({"f": 2.0}, duration_s=20.0, fn_tasks={"f": "mail"},
+                       seed=SEED)
+
+    profiles = {"f": prof}
+    clean = summarize(ClusterSim(SchedulerConfig(
+        n_gpus=2, policy="tidal", dk=True, keep_alive_s=5.0),
+        profiles).run(trace))
+    assert clean["failed"] == 0 and clean["retried"] == 0
+
+    def crashy(max_retries):
+        cfg = SchedulerConfig(n_gpus=2, policy="tidal", dk=True,
+                              keep_alive_s=5.0, crash_rate=0.3,
+                              crash_seed=SEED, max_retries=max_retries)
+        return summarize(ClusterSim(cfg, profiles).run(trace))
+
+    retry, retry2, noretry = crashy(3), crashy(3), crashy(0)
+    assert retry == retry2                             # seeded determinism
+    assert retry["retried"] > 0
+    assert noretry["failed"] > 0
+    assert retry["completed_frac"] > noretry["completed_frac"]
+    assert retry["completed_frac"] > 0.9               # retries recover most
