@@ -9,6 +9,9 @@ smollm-135m validate mechanisms in tests/ and examples/.
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 
 from repro.core import costmodel as cm
 from repro.hw import A6000_PCIE4
@@ -26,6 +29,33 @@ def emit(rows, header=("name", "value_ms", "derived")):
     for r in rows:
         print(",".join(str(x) for x in r))
     return rows
+
+
+def write_bench_json(fig: str, metrics: dict, gates: dict | None = None,
+                     out_dir=None) -> pathlib.Path:
+    """Persist a ``--measured`` run's machine-readable result.
+
+    Writes ``BENCH_<fig>.json`` with the headline ``metrics``, the boolean
+    ``gates`` the run asserted, and ``passed`` (the AND of all gates; True
+    when the run reached this call with no gates, since assertions raise
+    before we get here).  Destination is ``$BENCH_OUT_DIR`` when set, else
+    ``benchmarks/out/`` next to this file.  Returns the written path.
+    """
+    if out_dir is None:
+        out_dir = os.environ.get(
+            "BENCH_OUT_DIR", pathlib.Path(__file__).parent / "out")
+    out_dir = pathlib.Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{fig}.json"
+    payload = {
+        "fig": fig,
+        "passed": all((gates or {}).values()),
+        "gates": {k: bool(v) for k, v in (gates or {}).items()},
+        "metrics": metrics,
+    }
+    path.write_text(json.dumps(payload, indent=2, default=float) + "\n")
+    print(f"bench-json,{path},")
+    return path
 
 
 def strategies(plan, hw=PAPER_HW, dynamic: bool = False, template_bytes=0):

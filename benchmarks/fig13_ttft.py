@@ -11,7 +11,7 @@ runtime reproduces the cost model's service-class ordering
 
 import sys
 
-from benchmarks.common import PAPER_HW, emit, lora_bytes
+from benchmarks.common import PAPER_HW, emit, lora_bytes, write_bench_json
 from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 
@@ -66,7 +66,14 @@ def main(measured: bool = False):
                  round(sum(speedups_sllm) / len(speedups_sllm), 2),
                  "paper=2.00x"))
     if measured:
-        rows += measured_rows()
+        mrows = measured_rows()
+        rows += mrows
+        vals = {n.rsplit("-", 1)[-1]: v for n, v, _ in mrows}
+        write_bench_json(
+            "fig13_ttft", {n: v for n, v, _ in mrows},
+            gates={"warm_below_fork_below_cold":
+                   set(vals) >= {"warm", "fork", "cold"}
+                   and vals["warm"] < vals["fork"] < vals["cold"]})
     return emit(rows)
 
 

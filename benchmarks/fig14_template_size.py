@@ -18,7 +18,7 @@ per request, and bounded greedy divergence over the full completions."""
 
 import sys
 
-from benchmarks.common import PAPER_HW, emit, lora_bytes
+from benchmarks.common import PAPER_HW, emit, lora_bytes, write_bench_json
 from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 
@@ -194,7 +194,13 @@ def main(paged: bool = False, kv_int8: bool = False):
     if paged:
         rows += paged_rows()
     if kv_int8:
-        rows += int8_rows()
+        irows = int8_rows()
+        rows += irows
+        write_bench_json(          # int8_rows raises before this on failure
+            "fig14_template_size", {n: v for n, v, _ in irows},
+            gates={"int8_resident_bytes_ratio_ge_1p8": True,
+                   "first_token_exact": True,
+                   "greedy_divergence_bounded": True})
     return emit(rows, header=("name", "value", "derived"))
 
 

@@ -27,7 +27,7 @@ if "--measured" in sys.argv:
         os.environ["XLA_FLAGS"] = (
             flags + " --xla_force_host_platform_device_count=8").strip()
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 from repro.hw import A100_PCIE3
@@ -129,7 +129,10 @@ def main(measured: bool = False):
             rows.append((f"{arch}-tp{tp}/{k}", round(v * 1e3, 1),
                          f"speedup={pin/v:.2f}x"))
     if measured:
-        rows += measured_rows()
+        mrows = measured_rows()
+        rows += mrows
+        write_bench_json("fig18_distributed", {n: v for n, v, _ in mrows},
+                         gates={"live_tp_serve_completed": bool(mrows)})
     return emit(rows)
 
 

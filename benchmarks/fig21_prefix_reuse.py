@@ -16,7 +16,7 @@ either axis (the CI bench-smoke gate).
 
 import sys
 
-from benchmarks.common import PAPER_HW, emit
+from benchmarks.common import PAPER_HW, emit, write_bench_json
 from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 
@@ -108,7 +108,12 @@ def measured_rows(arch: str = "llama3-8b", n_layers: int = 4,
 def main(measured: bool = False):
     rows = analytic_rows()
     if measured:
-        rows += measured_rows()
+        mrows = measured_rows()     # raises before returning on gate failure
+        rows += mrows
+        write_bench_json("fig21_prefix_reuse", {n: v for n, v, _ in mrows},
+                         gates={"token_parity": True,
+                                "reuse_lowers_warm_ttft": True,
+                                "reuse_maps_fewer_fresh_pages": True})
     return emit(rows, header=("name", "value", "derived"))
 
 

@@ -26,7 +26,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import PAPER_HW, emit
+from benchmarks.common import PAPER_HW, emit, write_bench_json
 from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 
@@ -244,7 +244,11 @@ def measured_rows():
 def main(measured: bool = False):
     rows = analytic_rows()
     if measured:
-        rows += measured_rows()
+        mrows = measured_rows()     # raises before returning on gate failure
+        rows += mrows
+        write_bench_json("fig_chunked_prefill", {n: v for n, v, _ in mrows},
+                         gates={"chunked_p95_short_below_unchunked": True,
+                                "token_parity": True})
     return emit(rows)
 
 

@@ -35,7 +35,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.core.plans import plan_for
 from repro.core.scheduler import (ClusterSim, FunctionProfile,
                                   SchedulerConfig, make_trace, summarize)
@@ -240,7 +240,11 @@ def measured_rows():
 def main(measured: bool = False):
     rows = analytic_rows()
     if measured:
-        rows += measured_rows()
+        mrows = measured_rows()     # raises before returning on gate failure
+        rows += mrows
+        write_bench_json("fig_fault_recovery", {n: v for n, v, _ in mrows},
+                         gates={"supervised_failover_completes_more": True,
+                                "retry_token_parity": True})
     return emit(rows)
 
 

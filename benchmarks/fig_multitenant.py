@@ -29,7 +29,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import PAPER_HW, emit
+from benchmarks.common import PAPER_HW, emit, write_bench_json
 from repro.core import costmodel as cm
 from repro.core.plans import plan_for
 
@@ -259,7 +259,11 @@ def measured_rows():
 def main(measured: bool = False):
     rows = analytic_rows()
     if measured:
-        rows += measured_rows()
+        mrows = measured_rows()     # raises before returning on gate failure
+        rows += mrows
+        write_bench_json("fig_multitenant", {n: v for n, v, _ in mrows},
+                         gates={"slot_partitioned_beats_exclusive": True,
+                                "adapter_gather_parity": True})
     return emit(rows)
 
 

@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.fig20_order_overhead",
     "benchmarks.fig21_prefix_reuse",
     "benchmarks.fig_p95_ttft",
+    "benchmarks.fig_predictive_prewarm",
     "benchmarks.fig_multitenant",
     "benchmarks.table3_merging",
     "benchmarks.roofline_table",

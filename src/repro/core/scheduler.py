@@ -27,6 +27,7 @@ oracle as fallback for anything unmeasured — closing the sim-vs-real loop.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Callable, Optional
 
 import numpy as np
@@ -51,26 +52,64 @@ class SimRequest:
     # per-request queueing budget (the live gateway's deadline_s): a
     # request still queued past it is SHED without consuming service
     deadline_s: Optional[float] = None
+    # the live gateway's admission priority (higher admits first under
+    # bounded admission); the sim's FIFO queues carry it through traces
+    priority: int = 0
 
 
 def make_trace(fn_rates: dict, duration_s: float, fn_tasks: dict,
-               seed: int = 0) -> list:
+               seed: int = 0, fn_deadlines: Optional[dict] = None,
+               fn_priorities: Optional[dict] = None) -> list:
     """Poisson arrivals per function; rates in requests/s (the paper scales
-    7-day Azure traces into a compressed window the same way)."""
+    7-day Azure traces into a compressed window the same way).
+    ``fn_deadlines`` / ``fn_priorities`` optionally stamp per-function
+    queueing budgets and admission priorities onto the requests."""
     rng = np.random.default_rng(seed)
     reqs = []
     rid = 0
     for fn, rate in fn_rates.items():
         t = 0.0
         ilen = TASK_INPUT_LENS[fn_tasks[fn]]
+        deadline = (fn_deadlines or {}).get(fn)
+        priority = int((fn_priorities or {}).get(fn, 0))
         while True:
             t += rng.exponential(1.0 / rate)
             if t >= duration_s:
                 break
-            reqs.append(SimRequest(fn, t, ilen, rid))
+            reqs.append(SimRequest(fn, t, ilen, rid, deadline_s=deadline,
+                                   priority=priority))
             rid += 1
     reqs.sort(key=lambda r: r.arrival_s)
     return reqs
+
+
+def export_trace(requests: list, path: str) -> int:
+    """Write a trace as JSONL, one SimRequest per line.
+
+    Floats round-trip exactly (json uses repr-faithful shortest floats),
+    so export -> import is BIT-IDENTICAL: the same file drives the
+    simulator and the live gateway replay with equal arrival stamps.
+    Returns the number of requests written."""
+    with open(path, "w") as f:
+        for r in requests:
+            rec = {"fn_name": r.fn_name, "arrival_s": float(r.arrival_s),
+                   "input_len": int(r.input_len), "req_id": int(r.req_id),
+                   "deadline_s": (None if r.deadline_s is None
+                                  else float(r.deadline_s)),
+                   "priority": int(r.priority)}
+            f.write(json.dumps(rec) + "\n")
+    return len(requests)
+
+
+def import_trace(path: str) -> list:
+    """Read a JSONL trace back into SimRequests (inverse of export)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(SimRequest(**json.loads(line)))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -106,6 +106,10 @@ def _serve_open_loop(rt: FaaSRuntime, model, args, rng) -> None:
               f"p50 ttft {np.percentile(ttfts, 50)*1e3:.1f}ms  "
               f"p95 {np.percentile(ttfts, 95)*1e3:.1f}ms  "
               f"kinds={dict(kinds)}")
+    if rt.control_plane is not None:
+        cp = rt.control_plane
+        print(f"control plane: {cp.stats}  "
+              f"pinned={fmt_bytes(cp.pinned_nbytes())}")
 
 
 def main():
@@ -141,6 +145,16 @@ def main():
                     help="quantize the paged KV arena (int8 values + "
                          "per-row scales, dequantized inside the Pallas "
                          "decode kernel); default keeps the fp arena")
+    ap.add_argument("--predictive", action="store_true",
+                    help="attach the prewarm control plane: forecast "
+                         "arrivals to pre-fork engines and adapt "
+                         "keep-alive, and bake runtime-observed hot "
+                         "prompt prefixes under a pinned-bytes budget")
+    ap.add_argument("--prewarm-horizon", type=float, default=0.25,
+                    help="forecast horizon (s) for predictive pre-forking")
+    ap.add_argument("--prefix-budget", type=int, default=1 << 22,
+                    help="pinned-bytes budget for runtime-learned "
+                         "prefix KV")
     args = ap.parse_args()
 
     mesh = None
@@ -162,6 +176,14 @@ def main():
                      mesh=mesh,
                      chunk_tokens=args.chunk_tokens,
                      kv_dtype=args.kv_dtype)
+
+    if args.predictive:
+        from repro.runtime.controlplane import ControlPlane
+        ControlPlane(rt, pinned_bytes_budget=args.prefix_budget,
+                     prewarm_horizon_s=args.prewarm_horizon)
+        print(f"control plane attached: prewarm horizon "
+              f"{args.prewarm_horizon}s, prefix budget "
+              f"{fmt_bytes(args.prefix_budget)}")
 
     rng = np.random.default_rng(0)
     for i in range(args.functions):

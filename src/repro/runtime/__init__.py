@@ -27,11 +27,20 @@
                 continuous batching with template-baked prompt caches,
                 plus length-bucketed measured service-time oracles for
                 the cluster scheduler
+  controlplane — predictive prewarm control plane: PrefixObserver mines
+                hot page-aligned prompt prefixes from the gateway's
+                admission stream and bakes them at runtime under a
+                pinned-bytes budget; ArrivalPredictor forecasts per-
+                function arrivals (EwmaHistogramPredictor baseline) and
+                drives prewarm forks + predictive keep-alive
 """
 
 from repro.distributed.sharding import ShardingPlan, serving_plan
 from repro.runtime.continuous import (ContinuousBatchingEngine, Request,
                                       RequestOutput, sharded_serve_fns)
+from repro.runtime.controlplane import (ArrivalPredictor, ControlPlane,
+                                        EwmaHistogramPredictor,
+                                        PrefixObserver, trace_schedule)
 from repro.runtime.engine import (Engine, GenerationResult, sample_greedy,
                                   sample_token)
 from repro.runtime.errors import (AdapterLoadFault, DeadlineExceeded,
@@ -53,16 +62,20 @@ from repro.runtime.kv_pool import (KVCachePool, PagedKVCachePool,
 from repro.runtime.prefix import PrefixIndex
 
 __all__ = [
-    "AdapterLoadFault", "ContinuousBatchingEngine", "DeadlineExceeded",
+    "AdapterLoadFault", "ArrivalPredictor", "ContinuousBatchingEngine",
+    "ControlPlane", "DeadlineExceeded",
     "DecodeFault", "Engine", "EngineFailure", "EngineStepFault",
+    "EwmaHistogramPredictor",
     "FaaSRuntime", "FaultPlan", "FaultSpec", "GenerationResult",
     "INJECTION_POINTS", "InjectedFault", "InvocationCancelled",
     "InvocationGateway", "InvocationHandle", "InvocationRequest",
     "KVCachePool", "MeasuredServiceTimes", "Overloaded",
     "PagedKVCachePool", "PartitionViolation", "PoolExhausted",
-    "PrefillFault", "PrefixHandle", "PrefixIndex", "Request",
+    "PrefillFault", "PrefixHandle", "PrefixIndex", "PrefixObserver",
+    "Request",
     "RequestOutput", "RuntimeFailure", "ShardingPlan", "SubmitResult",
     "WeightFetchFault", "fault_point", "install_fault_plan",
     "measure_service_times", "sample_greedy", "sample_token",
-    "serving_plan", "sharded_serve_fns", "use_fault_plan",
+    "serving_plan", "sharded_serve_fns", "trace_schedule",
+    "use_fault_plan",
 ]

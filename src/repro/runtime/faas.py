@@ -42,6 +42,7 @@ the least-loaded instance by more than ``locality_max_extra_load``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -149,6 +150,17 @@ class FaaSRuntime:
         self._prefix_handles: dict[tuple, object] = {}
         self._prefix_indexes: dict[tuple, PrefixIndex] = {}
         self._baked_events: dict[str, dict] = {}
+        # RUNTIME-LEARNED prefixes (control plane): hot observed prompt
+        # prefixes baked after deploy, tracked separately from template
+        # bakes so re-deploys and budget eviction release exactly them
+        self._runtime_prefix_handles: dict[tuple, list] = {}
+        # per-function service-class counters (cold/fork/warm/reuse-hit/
+        # shed/...): the observation stream the control plane consumes,
+        # surfaced through ``stats()``
+        self.fn_stats: dict[str, dict] = {}
+        # predictive prewarm control plane (attach_control_plane / the
+        # ControlPlane(runtime) constructor); None = pure keep-alive decay
+        self.control_plane = None
         # multi-tenant adapter serving: base functions deployed through
         # ``deploy_shared_base`` keep ONE resident engine per instance
         # whose adapter bank serves every function attached to them
@@ -281,6 +293,7 @@ class FaaSRuntime:
         if fn.name in self.functions:
             self.evict(fn.name)
         self.release_template_prefix(fn.name)
+        self._drop_runtime_prefixes(fn.name)
         self.functions[fn.name] = fn
         self.server.register(fn, example_event or {},
                              template_prompt=template_prompt)
@@ -367,11 +380,15 @@ class FaaSRuntime:
         share one bake; a DYNAMIC function bakes lazily per (event,
         instance) on the first fork of that event — reusing the fork's
         own params via ``params_fn`` — so every engine serves its
-        template suffix-only, not just the deploy-time example event."""
-        if fn_name not in self._baked_events:
-            return None
-        self._bake_template_prefix(fn_name, inst, params_fn=params_fn,
-                                   event=event)
+        template suffix-only, not just the deploy-time example event.
+
+        Runtime-LEARNED prefixes live in the same per-key index, so a
+        function without any template still gets an index once the
+        control plane bakes an observed hot prefix for it — and a fresh
+        fork picks the learned bakes up immediately."""
+        if fn_name in self._baked_events:
+            self._bake_template_prefix(fn_name, inst, params_fn=params_fn,
+                                       event=event)
         return self._prefix_indexes.get(
             self._prefix_key(fn_name, inst, event))
 
@@ -389,6 +406,182 @@ class FaaSRuntime:
                 index.unregister(handle)
             handle.pool.release_prefix(handle)
         return len(keys)
+
+    # ------------------------------------------------------------------
+    # runtime-learned prefixes + predictive prewarm (control-plane hooks)
+    # ------------------------------------------------------------------
+    def attach_control_plane(self, control_plane) -> None:
+        """Bind a ControlPlane: the gateway starts feeding it arrivals/
+        completions and ticking its actuators, and ``_prune`` consults
+        its predictive per-function keep-alive."""
+        control_plane.bind(self)
+
+    def runtime_prefix_nbytes(self, fn_name: str, n_tokens: int) -> int:
+        """Pinned bytes a runtime bake of ``n_tokens`` would cost on the
+        function's preferred instance (the control plane budgets BEFORE
+        baking, so the pinned-bytes cap is never overshot)."""
+        model = self.functions[fn_name].model
+        pool = self._pool_for(self._pick_instance(fn_name), model)
+        return pool.blocks_for(n_tokens) * pool.page_nbytes()
+
+    def _params_for_bake(self, fn_name: str, inst: _Instance, ekey: tuple,
+                         event: dict):
+        """Params to prefill a runtime bake under: a live warm engine's
+        (free — static functions accept any event's engine) or a fresh
+        fork's (streams the weights once)."""
+        fn = self.functions[fn_name]
+        for k, w in self._engines.items():
+            if k[0] != fn_name or w.instance != inst.idx:
+                continue
+            if fn.static or k[1] == ekey:
+                return w.engine.params()
+        session, _ = self.server.fork(fn_name, dict(event), plan=inst.plan)
+        params = session.params()
+        if inst.plan is not None:
+            params = jax.device_put(params,
+                                    inst.plan.param_shardings(fn.model))
+        return params
+
+    def bake_runtime_prefix(self, fn_name: str, tokens,
+                            event: Optional[dict] = None):
+        """Bake an OBSERVED hot prompt prefix into pinned arena pages.
+
+        The learned-prefix analogue of ``_bake_template_prefix``: prefill
+        ``tokens`` (page-aligned, >= one page, leaving suffix room within
+        ``max_len``) once, pin the pages (refcount 1 on the handle) and
+        register them in the function's per-(instance, event-key)
+        PrefixIndex — live warm engines of the same bake identity start
+        matching immediately; later forks pick the index up through
+        ``_prefix_index_for``.  Returns the PrefixHandle, or None when an
+        existing bake (template or learned) already covers ``tokens``."""
+        if fn_name not in self.functions:
+            raise KeyError(f"function {fn_name!r} is not deployed")
+        if fn_name in self._adapter_fns:
+            raise ValueError(
+                f"{fn_name}: adapter functions share a mixed-adapter "
+                "engine; their baked KV would be adapter-specific")
+        fn = self.functions[fn_name]
+        if not fn.model.supports_paged_kv:
+            raise ValueError(
+                f"{fn_name}: runtime prefixes need a paged attention "
+                f"family (got {fn.model.cfg.family!r})")
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        n = len(tokens)
+        if n < self.page_size or n % self.page_size:
+            raise ValueError(
+                f"{fn_name}: runtime prefix length {n} must be a "
+                f"non-zero multiple of the page size ({self.page_size})")
+        if n > self.max_len - 1:
+            raise ValueError(
+                f"{fn_name}: runtime prefix of {n} tokens leaves no "
+                f"suffix room within max_len={self.max_len}")
+        event = dict(event or {})
+        inst = self._pick_instance(fn_name)
+        key = self._prefix_key(fn_name, inst, event)
+        index = self._prefix_indexes.get(key)
+        if index is not None:
+            # probe with one sentinel token appended: a full-length match
+            # (reuse == n) means some existing bake already covers every
+            # token of this prefix — re-baking would only pin dead pages
+            probe = np.concatenate([tokens, np.asarray([-1], np.int32)])
+            hit = index.match(probe)
+            if hit is not None and hit[1] >= n:
+                return None
+        model = fn.model
+        pool = self._pool_for(inst, model)
+        params = self._params_for_bake(fn_name, inst, key[2], event)
+        prefill_fn = self._serve_fns_for(fn_name, inst)[0]
+        cache = model.make_cache(1, pool.padded_len)
+        if inst.plan is not None:
+            cache = jax.device_put(
+                cache, inst.plan.cache_shardings(model, cache))
+        _, cache = prefill_fn(params, {"tokens": jnp.asarray(tokens[None, :])},
+                              cache)
+        handle = pool.bake_prefix(cache, tokens)
+        index = self._prefix_indexes.setdefault(key,
+                                                PrefixIndex(self.page_size))
+        index.register(handle)
+        self._runtime_prefix_handles.setdefault(key, []).append(handle)
+        for k, w in self._engines.items():
+            if k[0] != fn_name or w.instance != inst.idx:
+                continue
+            if (() if fn.static else k[1]) == key[2]:
+                w.engine.prefix_index = index
+        return handle
+
+    def release_runtime_prefix(self, handle) -> None:
+        """Evict one learned prefix: unregister it from matching and drop
+        its pin.  Pages a live slot still borrows survive until that last
+        borrower releases (refcounts defer the reclaim); fresh requests
+        stop matching it immediately."""
+        for key in list(self._runtime_prefix_handles):
+            handles = self._runtime_prefix_handles[key]
+            if not any(h is handle for h in handles):
+                continue
+            handles[:] = [h for h in handles if h is not handle]
+            if not handles:
+                del self._runtime_prefix_handles[key]
+            index = self._prefix_indexes.get(key)
+            if index is not None:
+                index.unregister(handle)
+            break
+        if handle.pinned:
+            handle.pool.release_prefix(handle)
+
+    def _drop_runtime_prefixes(self, fn_name: Optional[str] = None) -> int:
+        """Release every learned prefix of ``fn_name`` (or all): their KV
+        was computed under params a re-deploy is about to replace."""
+        keys = [k for k in self._runtime_prefix_handles
+                if fn_name is None or k[0] == fn_name]
+        n = 0
+        for key in keys:
+            for handle in self._runtime_prefix_handles.pop(key):
+                index = self._prefix_indexes.get(key)
+                if index is not None:
+                    index.unregister(handle)
+                if handle.pinned:
+                    handle.pool.release_prefix(handle)
+                n += 1
+        return n
+
+    def prewarm_function(self, fn_name: str, event: Optional[dict] = None,
+                         now: Optional[float] = None) -> bool:
+        """Pre-fork an engine AHEAD of a forecast arrival so the next
+        invocation lands warm.  Returns True when a new engine was
+        actually created (False = one was already resident)."""
+        now = time.perf_counter() if now is None else now
+        if fn_name not in self.functions:
+            raise KeyError(f"function {fn_name!r} is not deployed")
+        n_before = len(self._engines)
+        self._engine_for(fn_name, event, now)
+        return len(self._engines) > n_before
+
+    def _count(self, fn_name: str, field: str, n: int = 1) -> None:
+        """Bump one per-function service-class counter."""
+        d = self.fn_stats.setdefault(fn_name, {})
+        d[field] = d.get(field, 0) + n
+
+    def stats(self) -> dict:
+        """Observability snapshot: per-function service-class counters
+        (cold/fork/warm admission kinds, terminal done/reuse_hits/shed/
+        failed/cancelled/rejected) with derived rates, plus the gateway's
+        supervision stats and — when attached — the control plane's."""
+        fns = {}
+        for fn_name, c in self.fn_stats.items():
+            d = dict(c)
+            admitted = sum(c.get(k, 0) for k in KINDS)
+            d["admitted"] = admitted
+            if admitted:
+                d["warm_rate"] = c.get("warm", 0) / admitted
+                d["cold_start_rate"] = (c.get("fork", 0)
+                                        + c.get("cold", 0)) / admitted
+            if c.get("done"):
+                d["reuse_hit_rate"] = c.get("reuse_hits", 0) / c["done"]
+            fns[fn_name] = d
+        out = {"functions": fns, "gateway": dict(self.gateway.stats)}
+        if self.control_plane is not None:
+            out["control_plane"] = dict(self.control_plane.stats)
+        return out
 
     def _prewarm_engine_fns(self, fn: LLMFunction, seq: int) -> list:
         """Populate the jit caches of this model's shared serve fns by
@@ -620,6 +813,16 @@ class FaaSRuntime:
             self._drop_engine(k)
         return len(keys)
 
+    def _keep_alive_for(self, key: tuple, now: float) -> float:
+        """Keep-alive window for one engine key: the static default, or —
+        with a control plane attached — its predictive per-function value
+        (extended for functions forecast to recur, shortened for ones
+        forecast idle)."""
+        if self.control_plane is None:
+            return self.keep_alive_s
+        return self.control_plane.keep_alive_s_for(key[0], self.keep_alive_s,
+                                                   now=now)
+
     def _prune(self, now: float) -> None:
         """Keep-alive expiry + LRU cap — IDLE engines only: an engine with
         queued/active gateway requests is serving someone's ticket, and
@@ -628,7 +831,8 @@ class FaaSRuntime:
         idle = [k for k, w in self._engines.items()
                 if not w.engine.n_pending]
         for k in [k for k in idle
-                  if now - self._engines[k].last_used_s > self.keep_alive_s]:
+                  if now - self._engines[k].last_used_s
+                  > self._keep_alive_for(k, now)]:
             idle.remove(k)
             self._drop_engine(k)
         while len(self._engines) > self.max_warm_engines and idle:

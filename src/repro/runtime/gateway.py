@@ -276,6 +276,7 @@ class InvocationHandle:
             reused_prefix_len=out.reused_prefix_len,
             status=out.status if out.status != "failed" else CANCELLED,
             retries=self.retries)
+        self._gateway._note_terminal(self)
 
     def _fail(self, error: Exception) -> None:
         """Terminalize as FAILED with a typed error (crash/overload path)."""
@@ -286,6 +287,7 @@ class InvocationHandle:
             tokens=np.asarray(self._tokens, np.int32),
             ttft_s=float("nan"), e2e_s=float("nan"),
             fork_stats=self.fork_stats, status=FAILED, retries=self.retries)
+        self._gateway._note_terminal(self)
 
 
 class InvocationGateway:
@@ -366,6 +368,12 @@ class InvocationGateway:
             rt._prune(now)
             prompt = np.asarray(request.prompt, np.int32).reshape(-1)
             rt._validate(request.fn_name, prompt, request.max_new_tokens)
+            if rt.control_plane is not None:
+                # every VALID arrival trains the forecaster — including
+                # ones shed below: the arrival pattern is real even when
+                # the service never happens
+                rt.control_plane.on_arrival(request.fn_name, now,
+                                            request.event)
             if (request.deadline_s is not None
                     and time.perf_counter() - now > request.deadline_s):
                 # dead on arrival against the request's OWN clock: a
@@ -378,10 +386,12 @@ class InvocationGateway:
                                           "shed", None)
                 handle.submit_s = now
                 handle._state = SHED
+                self._note_terminal(handle)
                 return handle
             request, browned_out = self._admit_bounded(request)
             key, engine, kind, stats = rt._engine_for(request.fn_name,
                                                       request.event, now)
+            rt._count(request.fn_name, kind)
             handle = InvocationHandle(self, request, -1, key, engine, kind,
                                       stats)
             handle.submit_s = now        # TTFT includes the fork above
@@ -417,6 +427,7 @@ class InvocationGateway:
             victim = self._shed_victim(request.priority)
             if victim is None:
                 self.stats["overload_rejections"] += 1
+                self.runtime._count(request.fn_name, "rejected")
                 raise Overloaded(
                     f"gateway at max_live={self.max_live} in-flight "
                     f"invocations; priority {request.priority} arrival "
@@ -477,6 +488,36 @@ class InvocationGateway:
         return (self.max_live is not None
                 and self.pressure() >= self.brownout_threshold)
 
+    def _note_terminal(self, handle: InvocationHandle) -> None:
+        """Fold one terminal ticket into the observation stream.
+
+        Bumps the runtime's per-function service-class counters and —
+        when a control plane is attached — feeds completed invocations
+        (prompt, kind, reuse length) to its prefix observer.  Every
+        terminalization path routes through here exactly once.
+        """
+        rt = self.runtime
+        fn_name = handle.request.fn_name
+        state = handle._state
+        if state == DONE:
+            rt._count(fn_name, "done")
+            res = handle._result
+            reused = res.reused_prefix_len if res is not None else 0
+            if reused > 0:
+                rt._count(fn_name, "reuse_hits")
+            if rt.control_plane is not None:
+                rt.control_plane.on_completion(
+                    fn_name, handle.request.event,
+                    np.asarray(handle.request.prompt,
+                               np.int32).reshape(-1),
+                    handle.kind, reused, time.perf_counter())
+        elif state == SHED:
+            rt._count(fn_name, "shed")
+        elif state == CANCELLED:
+            rt._count(fn_name, "cancelled")
+        elif state == FAILED:
+            rt._count(fn_name, "failed")
+
     def cancel(self, handle: InvocationHandle) -> bool:
         """Cancel the handle's request; False if already terminal."""
         with self._wake:
@@ -494,6 +535,7 @@ class InvocationGateway:
                     ttft_s=float("nan"), e2e_s=float("nan"),
                     fork_stats=handle.fork_stats, status=CANCELLED,
                     retries=handle.retries)
+                self._note_terminal(handle)
                 return True
             if handle.engine.cancel(handle.req_id):
                 self._collect(handle.engine)
@@ -654,6 +696,14 @@ class InvocationGateway:
             if wait > 0:
                 if any(not h.done for h in handles):
                     self.pump(timeout=wait)
+                elif self.runtime.control_plane is not None:
+                    # idle gap between arrivals: sleep in tick-sized
+                    # slices so the control plane can prewarm/bake AHEAD
+                    # of the next burst instead of reacting to it
+                    cp = self.runtime.control_plane
+                    with self._lock:
+                        cp.maybe_tick()
+                    time.sleep(min(wait, max(cp.tick_interval_s, 1e-3)))
                 else:
                     time.sleep(wait)
                 continue
@@ -710,6 +760,12 @@ class InvocationGateway:
         on with the surviving engines.  In drain mode the first runnable
         engine runs to completion instead.
         """
+        cp = self.runtime.control_plane
+        if cp is not None:
+            # actuate the control plane from the scheduling loop: ticks
+            # stay cooperative, so whichever thread pumps (caller or the
+            # background pump daemon) remains the only JAX stepper
+            cp.maybe_tick()
         next_due = self._service_retries()
         engines = self._engines()
         if not engines:
@@ -939,6 +995,7 @@ class InvocationGateway:
                     ttft_s=float("nan"), e2e_s=float("nan"),
                     fork_stats=h.fork_stats, status=CANCELLED,
                     retries=h.retries)
+                self._note_terminal(h)
             w = self.runtime._engines.get(h.engine_key)
             if w is not None and w.engine is engine:
                 w.last_used_s = now

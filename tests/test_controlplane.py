@@ -1,0 +1,372 @@
+"""Predictive prewarm control plane: arrival forecasting, prefix-observer
+mining, runtime-learned prefix bakes (reuse hits on observed non-template
+prefixes), budgeted eviction under refcount pressure (deferred reclaim
+with live borrowers, exact page return, budget never exceeded), predictive
+keep-alive, per-function service-class counters, and the ClusterSim trace
+JSONL round-trip that lets one trace drive the simulator and the live
+gateway replay."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import api as tidal
+from repro.core.scheduler import (ClusterSim, FunctionProfile,
+                                  SchedulerConfig, SimRequest, export_trace,
+                                  import_trace, make_trace, summarize)
+from repro.models.registry import get_smoke_model
+from repro.runtime.controlplane import (ControlPlane, EwmaHistogramPredictor,
+                                        PrefixObserver, trace_schedule)
+from repro.runtime.faas import FaaSRuntime
+
+MAX_LEN = 48
+PS = 8
+PREFIX_LEN = 2 * PS                       # a 2-page shared prompt root
+
+
+def _model(n_layers=2):
+    return get_smoke_model("smollm-135m", n_layers=n_layers)
+
+
+def _runtime(model, fn="fn", template_prompt=None, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("page_size", PS)
+    kw.setdefault("trace_seq", PREFIX_LEN)
+    kw.setdefault("prewarm", False)
+    rt = FaaSRuntime(**kw)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rt.deploy(tidal.static_function(fn, model, params), {},
+              template_prompt=template_prompt)
+    return rt
+
+
+def _shared_prefix_prompts(model, n, seed=0, suffix_len=PS):
+    """``n`` prompts sharing one 2-page prefix with distinct suffixes."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, model.cfg.vocab_size, PREFIX_LEN)
+    return prefix.astype(np.int32), [
+        np.concatenate([prefix, rng.integers(0, model.cfg.vocab_size,
+                                             suffix_len)]).astype(np.int32)
+        for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# arrival forecasting
+# ---------------------------------------------------------------------------
+
+def test_predictor_periodic_forecast():
+    """A strictly periodic function forecasts: high arrival probability
+    once the period is nearly elapsed, none right after an arrival, none
+    after going quiet past every observed gap."""
+    p = EwmaHistogramPredictor()
+    for t in (0.0, 10.0, 20.0, 30.0, 40.0):
+        p.observe("f", t)
+    assert p.n_observations("f") == 5
+    assert p.rate("f", 41.0) == pytest.approx(0.1)
+    # just after an arrival: the next one is ~a full period away
+    assert p.p_within("f", 41.0, 2.0) == 0.0
+    # late in the period (slack-adjusted elapsed 8s): arrival imminent
+    assert p.p_within("f", 50.0, 2.5) == 1.0
+    eta = p.next_eta("f", 50.0)
+    assert eta is not None and 0.0 <= eta <= 2.5
+    # quiet past every observed gap: the forecast collapses to idle
+    assert p.p_within("f", 200.0, 5.0) == 0.0
+    assert p.next_eta("f", 200.0) is None
+    assert p.functions() == ["f"]
+
+
+def test_predictor_unseen_function():
+    p = EwmaHistogramPredictor()
+    assert p.rate("ghost", 1.0) == 0.0
+    assert p.p_within("ghost", 1.0, 10.0) == 0.0
+    assert p.next_eta("ghost", 1.0) is None
+
+
+# ---------------------------------------------------------------------------
+# prefix-observer mining
+# ---------------------------------------------------------------------------
+
+def test_observer_nominates_deepest_shared_extent():
+    """Three prompts sharing 2 pages nominate ONE node — the 2-page
+    extent, covering its depth-1 ancestor — once min_hits is reached."""
+    m = _model(n_layers=1)
+    obs = PrefixObserver(PS, min_hits=3)
+    prefix, prompts = _shared_prefix_prompts(m, 3)
+    for i, prompt in enumerate(prompts):
+        obs.observe(("fn", ()), prompt, now=float(i))
+    noms = obs.nominate(now=3.0, limit=8)
+    assert len(noms) == 1                  # ancestor covered, suffixes cold
+    key, node = noms[0]
+    assert key[1] == 2                     # depth: two pages
+    np.testing.assert_array_equal(node.tokens, prefix)
+    obs.mark_baked(key)
+    assert obs.nominate(now=3.0, limit=8) == []
+    obs.forget(key)                        # evicted: must re-earn its hits
+    assert obs.node_stats(key)[0] == 0
+    assert obs.nominate(now=3.0, limit=8) == []
+
+
+def test_observer_below_min_hits_and_bounded_nodes():
+    m = _model(n_layers=1)
+    obs = PrefixObserver(PS, min_hits=3, max_nodes=8)
+    _, prompts = _shared_prefix_prompts(m, 2)
+    for prompt in prompts:
+        obs.observe(("fn", ()), prompt, now=0.0)
+    assert obs.nominate(now=1.0) == []     # 2 hits < min_hits
+    rng = np.random.default_rng(7)
+    for i in range(20):                    # many distinct cold prompts
+        obs.observe(("fn", ()), rng.integers(
+            0, m.cfg.vocab_size, 3 * PS).astype(np.int32), now=float(i))
+    assert len(obs) <= 8
+
+
+# ---------------------------------------------------------------------------
+# runtime-learned reuse (acceptance: non-template prefixes hit)
+# ---------------------------------------------------------------------------
+
+def test_runtime_learned_prefix_produces_reuse_hits():
+    """A repeated prompt root the deploy never declared gets observed,
+    baked at runtime, and the NEXT invocation reuses it suffix-only —
+    with bit-identical greedy tokens and pinned bytes within budget."""
+    m = _model()
+    rt = _runtime(m)                       # no template_prompt anywhere
+    cp = ControlPlane(rt, min_hits=3, tick_interval_s=0.0)
+    _, prompts = _shared_prefix_prompts(m, 4)
+
+    ref = [rt.submit("fn", {}, p, 4) for p in prompts[:3]]
+    assert all(r.reused_prefix_len == 0 for r in ref)   # nothing baked yet
+    cp.tick()
+    assert cp.stats["prefix_bakes"] == 1
+    assert 0 < cp.pinned_nbytes() <= cp.pinned_bytes_budget
+    assert len(cp.learned_prefixes()) == 1
+
+    hit = rt.submit("fn", {}, prompts[3], 4)
+    assert hit.reused_prefix_len == PREFIX_LEN
+    # parity: the reused-prefix serve matches the sequential engine
+    from repro.runtime.engine import Engine
+    want = Engine(m, rt._engines[list(rt._engines)[0]].engine.params(),
+                  donate_cache=False).generate(
+        prompts[3][None], max_new_tokens=4, cache_len=MAX_LEN).tokens[0]
+    np.testing.assert_array_equal(hit.tokens, want)
+
+
+def test_bake_runtime_prefix_validations():
+    m = _model()
+    prefix = np.arange(PREFIX_LEN, dtype=np.int32)
+    rt = _runtime(m, template_prompt=prefix)
+    with pytest.raises(KeyError):
+        rt.bake_runtime_prefix("ghost", prefix)
+    with pytest.raises(ValueError):        # not page-aligned
+        rt.bake_runtime_prefix("fn", np.arange(PS + 1, dtype=np.int32))
+    with pytest.raises(ValueError):        # no suffix room within max_len
+        rt.bake_runtime_prefix("fn", np.arange(MAX_LEN, dtype=np.int32))
+    # the template bake already covers this extent: no duplicate pin
+    assert rt.bake_runtime_prefix("fn", prefix) is None
+
+
+# ---------------------------------------------------------------------------
+# eviction under refcount pressure (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_eviction_defers_reclaim_until_borrowers_release():
+    """Evicting a borrowed learned prefix unregisters it immediately but
+    reclaims its pages only when the last borrower releases — then frees
+    exactly the pinned pages."""
+    m = _model()
+    rt = _runtime(m)
+    pool = rt._pool_for(rt.instances[0], m)     # arena is lazily built
+    base_free = pool.n_free_pages
+    _, prompts = _shared_prefix_prompts(m, 1)
+    handle = rt.bake_runtime_prefix("fn", prompts[0][:PREFIX_LEN])
+    assert pool.prefix_page_refs(handle) == [1, 1]
+    assert pool.n_free_pages == base_free - 2
+
+    from repro.runtime.gateway import InvocationRequest
+    h = rt.gateway.submit(InvocationRequest("fn", prompts[0],
+                                            max_new_tokens=4))
+    stream = h.tokens()
+    next(stream)              # prefilled mid-decode: the borrow is LIVE
+    assert pool.prefix_page_refs(handle) == [2, 2]
+
+    rt.release_runtime_prefix(handle)
+    assert not handle.pinned
+    # deferred reclaim: the borrower still aliases both pages
+    assert pool.prefix_page_refs(handle) == [1, 1]
+    # fresh admissions no longer match the evicted prefix
+    h2 = rt.gateway.submit(InvocationRequest("fn", prompts[0],
+                                             max_new_tokens=4))
+    assert pool.prefix_page_refs(handle) == [1, 1]
+    assert h.result().reused_prefix_len == PREFIX_LEN
+    assert h2.result().reused_prefix_len == 0
+    rt.evict()
+    # exact page return: every pinned page came back, none leaked
+    assert pool.prefix_page_refs(handle) == [0, 0]
+    assert pool.n_free_pages == base_free
+
+
+def test_pinned_budget_never_exceeded_under_churn():
+    """With a budget of exactly one 2-page bake, alternating hot roots
+    evict each other round after round — pinned bytes never overshoot,
+    and all pages return once the learned cache drops."""
+    m = _model()
+    rt = _runtime(m)
+    pool = rt._pool_for(rt.instances[0], m)     # arena is lazily built
+    base_free = pool.n_free_pages
+    budget = rt.runtime_prefix_nbytes("fn", PREFIX_LEN)
+    cp = ControlPlane(rt, pinned_bytes_budget=budget, min_hits=3,
+                      tick_interval_s=0.0)
+    roots = [_shared_prefix_prompts(m, 3, seed=s)[1] for s in (1, 2)]
+    now = 0.0
+    for rnd in range(4):
+        for prompt in roots[rnd % 2]:
+            now += 0.01
+            cp.on_completion("fn", {}, prompt, "warm", 0, now)
+        cp.tick(now)
+        assert 0 < cp.pinned_nbytes() <= budget
+        assert len(cp.learned_prefixes()) == 1
+    assert cp.stats["prefix_bakes"] == 4
+    assert cp.stats["prefix_evictions"] == 3
+    rt._drop_runtime_prefixes()
+    assert cp.pinned_nbytes() == 0
+    rt.evict()
+    assert pool.n_free_pages == base_free
+
+
+def test_never_fitting_prefix_is_not_retried():
+    """A nomination that could NEVER fit the budget is marked off instead
+    of thrashing the eviction loop every tick."""
+    m = _model()
+    rt = _runtime(m)
+    cp = ControlPlane(rt, pinned_bytes_budget=1, min_hits=3,
+                      tick_interval_s=0.0)
+    _, prompts = _shared_prefix_prompts(m, 3)
+    for i, p in enumerate(prompts):
+        cp.on_completion("fn", {}, p, "warm", 0, float(i))
+    cp.tick(1.0)
+    assert cp.stats["prefix_bakes"] == 0
+    assert cp.pinned_nbytes() == 0
+    assert cp.observer.nominate(2.0) == []           # marked, not re-tried
+
+
+# ---------------------------------------------------------------------------
+# prewarm + predictive keep-alive
+# ---------------------------------------------------------------------------
+
+def test_prewarm_forks_ahead_of_forecast_burst():
+    """With a periodic arrival history, the tick right before the next
+    forecast arrival pre-forks the engine; ticks far from it do not."""
+    m = _model()
+    rt = _runtime(m, keep_alive_s=1e9)
+    cp = ControlPlane(rt, prewarm_horizon_s=5.0, prewarm_p=0.5,
+                      tick_interval_s=0.0)
+    for t in (100.0, 110.0, 120.0, 130.0):
+        cp.on_arrival("fn", t, {})
+    rt.evict()
+    cp.tick(now=131.0)                     # next arrival ~9s out: too far
+    assert cp.stats["prewarm_forks"] == 0 and not rt.warm_engines()
+    cp.tick(now=138.0)                     # forecast inside the horizon
+    assert cp.stats["prewarm_forks"] == 1 and rt.warm_engines()
+    cp.tick(now=138.5)                     # already warm: no double fork
+    assert cp.stats["prewarm_forks"] == 1
+
+
+def test_predictive_keep_alive_extends_and_releases():
+    """Recurring functions get an extended window; functions predicted
+    idle release early — but never on a cold-start guess."""
+    rt = None                              # keep_alive_s_for needs no rt
+    cp = ControlPlane(extend_factor=6.0, extend_p=0.5,
+                      release_factor=0.25, release_p=0.05,
+                      min_observations=4)
+    for t in (0.0, 10.0, 20.0, 30.0, 40.0):
+        cp.predictor.observe("hot", t)
+    cp.predictor.observe("cold-guess", 0.0)
+    # extended: a 2s default window misses the 10s period, but 6x covers it
+    assert cp.keep_alive_s_for("hot", 2.0, now=41.0) == pytest.approx(12.0)
+    # idle past every observed gap: early release
+    assert cp.keep_alive_s_for("hot", 2.0, now=300.0) == pytest.approx(0.5)
+    # one observation is no evidence of idleness: keep the default
+    assert cp.keep_alive_s_for("cold-guess", 2.0,
+                               now=300.0) == pytest.approx(2.0)
+
+
+def test_runtime_prune_consults_control_plane(monkeypatch):
+    """``_prune`` expires engines under the PREDICTIVE window, not the
+    static default, once a control plane is attached."""
+    m = _model()
+    rt = _runtime(m, keep_alive_s=1e9)
+    rt.submit("fn", {}, np.arange(PS, dtype=np.int32), 2)
+    assert rt.warm_engines()
+    cp = ControlPlane(rt)
+    monkeypatch.setattr(cp, "keep_alive_s_for",
+                        lambda fn, default_s, now=None: 0.0)
+    rt._prune(rt._engines[list(rt._engines)[0]].last_used_s + 1.0)
+    assert not rt.warm_engines()
+
+
+# ---------------------------------------------------------------------------
+# per-function service-class counters
+# ---------------------------------------------------------------------------
+
+def test_fn_stats_counters_and_rates():
+    m = _model()
+    rt = _runtime(m)
+    cp = ControlPlane(rt, tick_interval_s=0.0)
+    prompt = np.arange(PS, dtype=np.int32)
+    for _ in range(4):
+        rt.submit("fn", {}, prompt, 2)
+    s = rt.stats()
+    fn = s["functions"]["fn"]
+    assert fn["cold"] == 1 and fn["warm"] == 3 and fn["done"] == 4
+    assert fn["admitted"] == 4
+    assert fn["warm_rate"] == pytest.approx(0.75)
+    assert fn["cold_start_rate"] == pytest.approx(0.25)
+    assert "engine_failures" in s["gateway"]
+    assert s["control_plane"]["observations"] == 4
+
+
+# ---------------------------------------------------------------------------
+# trace export/import: one trace, two consumers
+# ---------------------------------------------------------------------------
+
+def test_trace_jsonl_roundtrip_bit_identical(tmp_path):
+    trace = make_trace({"mail-fn": 2.0, "code-fn": 1.0}, 5.0,
+                       {"mail-fn": "mail", "code-fn": "code"}, seed=3,
+                       fn_deadlines={"mail-fn": 0.25},
+                       fn_priorities={"code-fn": 2})
+    path = tmp_path / "trace.jsonl"
+    assert export_trace(trace, os.fspath(path)) == len(trace)
+    back = import_trace(os.fspath(path))
+    assert back == trace                   # frozen dataclasses: exact floats
+    path2 = tmp_path / "again.jsonl"
+    export_trace(back, os.fspath(path2))
+    assert path.read_bytes() == path2.read_bytes()
+
+
+def test_imported_trace_drives_sim_identically(tmp_path):
+    from repro.core.plans import plan_for
+    trace = make_trace({"fn": 3.0}, 4.0, {"fn": "conv"}, seed=1,
+                       fn_deadlines={"fn": 1.0})
+    path = tmp_path / "t.jsonl"
+    export_trace(trace, os.fspath(path))
+    prof = {"fn": FunctionProfile(
+        "fn", lambda L: plan_for("llama3-8b", 1, L),
+        model_bytes=plan_for("llama3-8b", 1, 128).total_weight_bytes)}
+    cfg = SchedulerConfig(n_gpus=2, keep_alive_s=5.0)
+    a = summarize(ClusterSim(cfg, prof).run(trace))
+    b = summarize(ClusterSim(cfg, prof).run(import_trace(os.fspath(path))))
+    assert a == b
+
+
+def test_trace_schedule_carries_deadlines_and_priorities():
+    trace = [SimRequest("fn", 0.5, 16, 0, deadline_s=0.2, priority=3)]
+    sched = trace_schedule(trace, lambda r: np.arange(r.input_len,
+                                                      dtype=np.int32),
+                           max_new_tokens=2)
+    (due, req), = sched
+    assert due == 0.5
+    assert req.fn_name == "fn" and req.deadline_s == 0.2
+    assert req.priority == 3 and req.max_new_tokens == 2
+    assert len(np.asarray(req.prompt)) == 16
